@@ -1,0 +1,109 @@
+"""Shared harness for the paper-table benchmarks.
+
+All tables run on the tiny_dense config at miniature scale (DESIGN.md §7:
+no Llama weights / C4 in the container), validating the paper's claims as
+RELATIVE ORDERINGS on a synthetic corpus. The dense teacher is pretrained
+once and cached under experiments/cache/.
+
+EBFT's learning rate is scaled to the tiny model (1e-2 vs the paper's
+2e-4 for Llama-7B): block reconstruction needs steps sized to the model's
+own training lr (3e-3 here), as the paper sizes theirs to Llama's.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt as CK
+from repro.configs import get_config
+from repro.core import ebft
+from repro.core.evaluate import cloze_accuracy, perplexity
+from repro.core.masks import prune
+from repro.data.tokens import (
+    CorpusConfig, SyntheticCorpus, calibration_set, corpus_iterator, eval_set,
+)
+from repro.models.model import build
+from repro.optim.optimizers import adamw
+from repro.training.train_loop import make_train_step
+
+CACHE = os.path.join(os.path.dirname(__file__), "..", "experiments", "cache")
+EBFT_LR = 1e-2
+PRETRAIN_STEPS = 300
+
+
+def dense_teacher(arch: str = "tiny_dense", steps: int = PRETRAIN_STEPS):
+    """Pretrained tiny model (cached on disk across benchmark runs)."""
+    cfg = get_config(arch)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    ckdir = os.path.join(CACHE, f"{arch}_{steps}")
+    if CK.latest_step(ckdir) == steps:
+        params = CK.restore(ckdir, {"params": params})["params"]
+        return model, params
+
+    corpus = shared_corpus(cfg.vocab_size)
+    opt = adamw(3e-3)
+    step = jax.jit(make_train_step(model.loss, opt))
+    opt_state = opt.init(params)
+    it = corpus_iterator(corpus, batch=32, seq_len=128, seed=1)
+    for _ in range(steps):
+        params, opt_state, _, _ = step(
+            params, opt_state, {"tokens": jnp.asarray(next(it))}, None
+        )
+    CK.save(ckdir, {"params": params}, step=steps, async_write=False)
+    return model, params
+
+
+_CORPORA: Dict[int, SyntheticCorpus] = {}
+
+
+def shared_corpus(vocab: int) -> SyntheticCorpus:
+    if vocab not in _CORPORA:
+        _CORPORA[vocab] = SyntheticCorpus(CorpusConfig(vocab_size=vocab))
+    return _CORPORA[vocab]
+
+
+def standard_sets(model, n_calib: int = 64, seq: int = 128):
+    corpus = shared_corpus(model.cfg.vocab_size)
+    return (
+        calibration_set(corpus, n_calib, seq),
+        eval_set(corpus, 16, seq),
+    )
+
+
+def run_ebft(model, dense, pruned, masks, calib, epochs: int = 8):
+    ecfg = ebft.EBFTConfig(lr=EBFT_LR, epochs=epochs, microbatch=8, patience=3)
+    t0 = time.time()
+    tuned, reports = ebft.finetune(model, dense, pruned, masks, calib, ecfg)
+    return tuned, reports, time.time() - t0
+
+
+# ---------------------------------------------------------------------------
+class Table:
+    """Collects rows, prints aligned text + writes CSV to experiments/."""
+
+    def __init__(self, name: str, columns: List[str]):
+        self.name = name
+        self.columns = columns
+        self.rows: List[List] = []
+
+    def add(self, *row):
+        self.rows.append(list(row))
+        print("  " + "  ".join(f"{v}" for v in row), flush=True)
+
+    def write(self, out_dir: Optional[str] = None):
+        out_dir = out_dir or os.path.join(
+            os.path.dirname(__file__), "..", "experiments", "benchmarks"
+        )
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(out_dir, f"{self.name}.csv")
+        with open(path, "w") as f:
+            f.write(",".join(self.columns) + "\n")
+            for r in self.rows:
+                f.write(",".join(str(v) for v in r) + "\n")
+        return path

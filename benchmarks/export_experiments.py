@@ -1,0 +1,104 @@
+"""Render the §Dry-run / §Roofline markdown tables for EXPERIMENTS.md from
+the dry-run JSON records (so the document is regenerable from artifacts).
+
+    python -m benchmarks.export_experiments [--baseline baseline] [--optimized optimized]
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Dict, List
+
+from benchmarks.roofline_report import load
+
+
+def _ms(x: float) -> str:
+    return f"{x*1e3:.1f}"
+
+
+def dryrun_table(recs: List[Dict], mesh: str) -> str:
+    rows = [r for r in recs if r.get("mesh") == mesh]
+    out = [
+        "| arch | shape | kind | chips | HBM/dev (GiB) | HLO GFLOPs/dev | coll wire MB/dev | status |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | {r['kind']} | {r['chips']} "
+                       f"| — | — | — | ERROR |")
+            continue
+        ma, st = r["memory_analysis"], r["hlo_stats"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} | {r['chips']} "
+            f"| {ma['peak_bytes_est']/2**30:.1f} "
+            f"| {st['flops']/1e9:.0f} "
+            f"| {st['collective_wire']/1e6:.0f} | ok |"
+        )
+    return "\n".join(out)
+
+
+def roofline_table(recs: List[Dict], mesh: str = "single") -> str:
+    rows = [r for r in recs if r.get("mesh") == mesh and "error" not in r]
+    out = [
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) | bottleneck | useful 6ND/HLO | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        t = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {_ms(t['compute_s'])} "
+            f"| {_ms(t['memory_s'])} | {_ms(t['collective_s'])} "
+            f"| **{t['bottleneck']}** | {t['useful_ratio']:.3f} "
+            f"| {t['roofline_fraction']:.3f} |"
+        )
+    return "\n".join(out)
+
+
+def compare_table(base: List[Dict], opt: List[Dict]) -> str:
+    bidx = {(r["arch"], r["shape"], r["mesh"]): r for r in base if "error" not in r}
+    out = [
+        "| arch | shape | term | baseline (ms) | optimized (ms) | delta | frac before → after |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(opt, key=lambda r: (r["arch"], r["shape"])):
+        key = (r["arch"], r["shape"], r["mesh"])
+        if r["mesh"] != "single" or "error" in r or key not in bidx:
+            continue
+        b, n = bidx[key]["roofline"], r["roofline"]
+        dom = b["bottleneck"] + "_s"
+        before, after = b[dom], n[dom]
+        if before <= 0:
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {b['bottleneck']} "
+            f"| {_ms(before)} | {_ms(after)} | {after/before:.3f}x "
+            f"| {b['roofline_fraction']:.3f} → {n['roofline_fraction']:.3f} |"
+        )
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="baseline")
+    ap.add_argument("--optimized", default="optimized")
+    ap.add_argument("--section", default="all",
+                    choices=["all", "dryrun", "roofline", "compare"])
+    args = ap.parse_args()
+    base = load(args.baseline)
+    opt = load(args.optimized)
+    if args.section in ("all", "dryrun"):
+        print("### Dry-run, single pod (16x16 = 256 chips)\n")
+        print(dryrun_table(opt or base, "single"))
+        print("\n### Dry-run, multi-pod (2x16x16 = 512 chips)\n")
+        print(dryrun_table(opt or base, "multi"))
+    if args.section in ("all", "roofline"):
+        print("\n### Roofline (baseline, paper-faithful distribution)\n")
+        print(roofline_table(base))
+        print("\n### Roofline (optimized)\n")
+        print(roofline_table(opt))
+    if args.section in ("all", "compare") and base and opt:
+        print("\n### Baseline → optimized (dominant-term deltas)\n")
+        print(compare_table(base, opt))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Roofline table from the dry-run JSON records (deliverable g).
+
+Reads experiments/dryrun/<tag>/*.json and prints/writes the per-cell
+three-term roofline with bottleneck, useful-compute ratio, and the
+roofline fraction. Compare two tags (baseline vs an optimization) with
+--compare.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List, Optional
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load(tag: str) -> List[Dict]:
+    d = os.path.join(DRYRUN_DIR, tag)
+    out = []
+    if not os.path.isdir(d):
+        return out
+    for fn in sorted(os.listdir(d)):
+        if fn.endswith(".json"):
+            with open(os.path.join(d, fn)) as f:
+                out.append(json.load(f))
+    return out
+
+
+def fmt_row(rec: Dict) -> str:
+    if "error" in rec:
+        return (f"{rec['arch']:24s} {rec['shape']:12s} {rec['mesh']:6s} "
+                f"ERROR: {rec['error'][:60]}")
+    r = rec["roofline"]
+    ma = rec["memory_analysis"]
+    return (
+        f"{rec['arch']:24s} {rec['shape']:12s} {rec['mesh']:6s} "
+        f"{r['compute_s']*1e3:10.1f} {r['memory_s']*1e3:10.1f} "
+        f"{r['collective_s']*1e3:10.1f}  {r['bottleneck']:10s} "
+        f"{r['useful_ratio']:6.3f} {r['roofline_fraction']:6.3f} "
+        f"{ma['peak_bytes_est']/2**30:7.1f}"
+    )
+
+
+HEADER = (
+    f"{'arch':24s} {'shape':12s} {'mesh':6s} "
+    f"{'comp_ms':>10s} {'mem_ms':>10s} {'coll_ms':>10s}  {'bottleneck':10s} "
+    f"{'useful':>6s} {'frac':>6s} {'GiB/dev':>7s}"
+)
+
+
+def run(tag: str = "baseline", compare: Optional[str] = None, mesh: str = "single"):
+    recs = [r for r in load(tag) if r.get("mesh") == mesh or mesh == "both"]
+    print(f"roofline [{tag}] ({len(recs)} cells, mesh={mesh})")
+    print(HEADER)
+    for rec in recs:
+        print(fmt_row(rec))
+    n_err = sum("error" in r for r in recs)
+    print(f"cells: {len(recs)}  failures: {n_err}")
+
+    if compare:
+        base = {(r["arch"], r["shape"], r["mesh"]): r for r in load(compare)}
+        print(f"\ndelta vs [{compare}] (dominant-term change):")
+        for rec in recs:
+            key = (rec["arch"], rec["shape"], rec["mesh"])
+            if key not in base or "error" in rec or "error" in base[key]:
+                continue
+            b, n = base[key]["roofline"], rec["roofline"]
+            dom = b["bottleneck"] + "_s"
+            before, after = b[dom], n.get(dom, 0.0)
+            if before > 0:
+                print(f"  {rec['arch']:24s} {rec['shape']:12s} {dom[:-2]:10s} "
+                      f"{before*1e3:9.1f} -> {after*1e3:9.1f} ms "
+                      f"({(after/before-1)*100:+.1f}%)  frac "
+                      f"{b['roofline_fraction']:.3f} -> {n['roofline_fraction']:.3f}")
+    return recs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--compare", default="")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    a = ap.parse_args()
+    run(a.tag, a.compare or None, a.mesh)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Benchmark orchestrator: one function per paper table/figure.
+
+    python -m benchmarks.run            # quick grids (CI-sized)
+    python -m benchmarks.run --full     # the paper's full grids
+    python -m benchmarks.run --only table1,table6
+
+Each table prints rows as it goes, writes a CSV under
+experiments/benchmarks/, and the roofline report (deliverable g) is
+appended from the dry-run artifacts if present.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks import (
+    fig2_calibration, roofline_report, table1_unstructured, table2_nm,
+    table3_zeroshot, table4_lora, table6_masktuning,
+)
+
+ALL = {
+    "table1": lambda quick: table1_unstructured.run(quick=quick),
+    "table2": lambda quick: table2_nm.run(quick=quick),
+    "table3": lambda quick: table3_zeroshot.run(quick=quick),
+    "table4": lambda quick: table4_lora.run(quick=quick),
+    "fig2": lambda quick: fig2_calibration.run(quick=quick),
+    "table6": lambda quick: table6_masktuning.run(quick=quick),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-sized grids")
+    ap.add_argument("--only", default="", help="comma list of table names")
+    args = ap.parse_args()
+
+    names = args.only.split(",") if args.only else list(ALL)
+    t_all = time.time()
+    for name in names:
+        print(f"\n=== {name} {'(full)' if args.full else '(quick)'} ===", flush=True)
+        t0 = time.time()
+        ALL[name](quick=not args.full)
+        print(f"=== {name} done in {time.time()-t0:.0f}s ===")
+
+    print("\n=== roofline (from dry-run artifacts) ===")
+    try:
+        if roofline_report.load("optimized"):
+            roofline_report.run("optimized", compare="baseline")
+        else:
+            roofline_report.run("baseline")
+    except Exception as e:  # noqa: BLE001 — dry-run may not have run yet
+        print(f"(skipped: {e})")
+    print(f"\nall benchmarks done in {time.time()-t_all:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""EBFT across model families — the paper's technique is block-structural,
+so the same driver fine-tunes a dense transformer, an MoE, and a Mamba2
+SSM (DESIGN.md §5 applicability table).
+
+    PYTHONPATH=src python examples/multiarch_ebft.py [--archs tiny_dense,tiny_moe,tiny_ssm]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import ebft
+from repro.core.evaluate import perplexity
+from repro.core.masks import prune
+from repro.data.tokens import (
+    CorpusConfig, SyntheticCorpus, calibration_set, corpus_iterator, eval_set,
+)
+from repro.models.model import build
+from repro.optim.optimizers import adamw
+from repro.training.train_loop import make_train_step
+
+
+def run_one(arch: str, sparsity: float) -> None:
+    cfg = get_config(arch)
+    model = build(cfg)
+    corpus = SyntheticCorpus(CorpusConfig(vocab_size=cfg.vocab_size))
+    params = model.init(jax.random.PRNGKey(0))
+
+    # SSD dynamics (dt, A_log) are lr-sensitive: train SSM/hybrid cooler
+    opt = adamw(1e-3 if cfg.family in ("ssm", "hybrid") else 3e-3)
+    step = jax.jit(make_train_step(model.loss, opt))
+    opt_state = opt.init(params)
+    it = corpus_iterator(corpus, batch=16, seq_len=128, seed=1)
+    for _ in range(120):
+        params, opt_state, _, _ = step(
+            params, opt_state, {"tokens": jnp.asarray(next(it))}, None
+        )
+
+    calib = calibration_set(corpus, 32, 128)
+    ev = eval_set(corpus, 8, 128)
+    ppl_dense = perplexity(model, params, ev)
+    masks, pruned = prune(model, params, calib, method="wanda", sparsity=sparsity)
+    ppl_pruned = perplexity(model, pruned, ev)
+    t0 = time.time()
+    tuned, reports = ebft.finetune(model, params, pruned, masks, calib,
+                                   ebft.EBFTConfig(lr=1e-2, epochs=6))
+    ppl = perplexity(model, tuned, ev)
+    print(f"{arch:12s} [{cfg.family:6s}] blocks={model.num_blocks:2d} "
+          f"dense={ppl_dense:7.2f} pruned={ppl_pruned:7.2f} ebft={ppl:7.2f} "
+          f"({time.time()-t0:.0f}s)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", default="tiny_dense,tiny_moe,tiny_ssm")
+    ap.add_argument("--sparsity", type=float, default=0.6)
+    args = ap.parse_args()
+    print(f"EBFT across families at {args.sparsity:.0%} sparsity")
+    for arch in args.archs.split(","):
+        run_one(arch, args.sparsity)
+
+
+if __name__ == "__main__":
+    main()

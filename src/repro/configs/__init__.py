@@ -1,0 +1,56 @@
+"""Config registry: ``get_config(name)`` / ``list_configs()``.
+
+One module per assigned architecture plus the paper's own Llama-7B and tiny
+test variants. Each module exposes ``CONFIG`` (exact assigned numbers) and
+``SMOKE`` (same family, reduced) ModelConfigs.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (
+    ALL_SHAPES,
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    TRAIN_4K,
+    ModelConfig,
+    ShapeConfig,
+)
+
+ARCH_IDS = [
+    "qwen1_5_4b",
+    "nemotron_4_15b",
+    "qwen2_5_32b",
+    "qwen1_5_110b",
+    "zamba2_1_2b",
+    "kimi_k2_1t_a32b",
+    "deepseek_moe_16b",
+    "seamless_m4t_medium",
+    "mamba2_130m",
+    "llava_next_mistral_7b",
+]
+EXTRA_IDS = ["llama_7b", "tiny_dense", "tiny_moe", "tiny_ssm", "tiny_hybrid",
+             "tiny_encdec", "tiny_vlm"]
+
+_ALIAS = {i.replace("_", "-"): i for i in ARCH_IDS + EXTRA_IDS}
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    name = _ALIAS.get(name, name)
+    mod = importlib.import_module(f"repro.configs.{name}")
+    if smoke:
+        return getattr(mod, "SMOKE", mod.CONFIG)
+    return mod.CONFIG
+
+
+def list_configs() -> List[str]:
+    return list(ARCH_IDS)
+
+
+def get_shape(name: str) -> ShapeConfig:
+    for s in ALL_SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(name)

@@ -1,0 +1,6 @@
+"""Tiny dense config for tests/benches (alias of llama_7b SMOKE)."""
+from repro.configs.base import ModelConfig
+
+from repro.configs.llama_7b import SMOKE as CONFIG
+
+SMOKE = CONFIG

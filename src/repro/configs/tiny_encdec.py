@@ -1,0 +1,6 @@
+"""Tiny encdec config for tests/benches (alias of seamless_m4t_medium SMOKE)."""
+from repro.configs.base import ModelConfig
+
+from repro.configs.seamless_m4t_medium import SMOKE as CONFIG
+
+SMOKE = CONFIG

@@ -1,0 +1,6 @@
+"""Tiny hybrid config for tests/benches (alias of zamba2_1_2b SMOKE)."""
+from repro.configs.base import ModelConfig
+
+from repro.configs.zamba2_1_2b import SMOKE as CONFIG
+
+SMOKE = CONFIG

@@ -1,0 +1,6 @@
+"""Tiny moe config for tests/benches (alias of deepseek_moe_16b SMOKE)."""
+from repro.configs.base import ModelConfig
+
+from repro.configs.deepseek_moe_16b import SMOKE as CONFIG
+
+SMOKE = CONFIG

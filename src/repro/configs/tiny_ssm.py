@@ -1,0 +1,6 @@
+"""Tiny ssm config for tests/benches (alias of mamba2_130m SMOKE)."""
+from repro.configs.base import ModelConfig
+
+from repro.configs.mamba2_130m import SMOKE as CONFIG
+
+SMOKE = CONFIG

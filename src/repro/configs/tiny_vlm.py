@@ -1,0 +1,6 @@
+"""Tiny vlm config for tests/benches (alias of llava_next_mistral_7b SMOKE)."""
+from repro.configs.base import ModelConfig
+
+from repro.configs.llava_next_mistral_7b import SMOKE as CONFIG
+
+SMOKE = CONFIG

@@ -1,0 +1,185 @@
+"""EBFT: block-wise fine-tuning of sparse LLMs (the paper's contribution).
+
+Algorithm 1, faithfully:
+
+    for block l = 1..L:
+        E ← block-wise reconstruction error (Eq. 4) over D_c
+        repeat up to T epochs, early-stopping when E converges:
+            W̄ₗ ← W̄ₗ − α · ∇_{W̄ₗ} E          (backprop through the block)
+        advance the sparse stream with the tuned block
+
+Paper hyper-parameters: D_c = 256×1024-token C4 segments, T = 10 epochs,
+α = 2e-4 (Adam). Masks are frozen throughout — only surviving weights
+move; the mask is applied *inside* the loss (W̄ = M ⊙ W), so pruned slots
+get exactly zero gradient by the chain rule.
+
+Streaming property (the paper's 16 GB claim): only one block's weights +
+optimizer moments are live at a time; the teacher/student streams advance
+microbatch-wise. On the pod this block-locality becomes a pipelining
+opportunity (DESIGN.md §3) — block l+1's teacher stream can be produced
+while block l fine-tunes.
+
+Zamba2's shared attention block (one weight set, G invocation sites) is
+fine-tuned once on the *sum* of its per-site reconstruction errors
+(DESIGN.md §5): site data is collected during the walk and the shared
+block is tuned on the union afterwards.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import reconstruction as R
+from repro.core.pruning import common as C
+from repro.optim.optimizers import adam, apply_updates
+from repro.optim.schedules import plateau_early_stop
+from repro.sparsity.sparse_params import apply_masks
+
+Params = Any
+
+
+@dataclasses.dataclass
+class EBFTConfig:
+    lr: float = 2e-4
+    epochs: int = 10          # paper: T = 10
+    microbatch: int = 8
+    patience: int = 2         # early stop when loss plateaus (paper: "converged")
+    rel_tol: float = 1e-3
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class BlockReport:
+    index: int
+    kind: str
+    epochs_run: int
+    loss_before: float
+    loss_after: float
+
+
+# ---------------------------------------------------------------------------
+def _make_tune_step(model, kind_rep_i: int, ecfg: EBFTConfig):
+    """One Adam step on a block's weights against Eq. 4. Compiled once per
+    block *kind* (same shapes ⇒ same executable for every layer)."""
+    opt = adam(ecfg.lr)
+
+    def loss_fn(bw, mask_bp, h, target, pos, aux):
+        return R.block_loss(model, kind_rep_i, bw, mask_bp, h, target, pos, aux)
+
+    vg = jax.value_and_grad(loss_fn)
+
+    @jax.jit
+    def step(bw, opt_state, mask_bp, h, target, pos, aux):
+        loss, g = vg(bw, mask_bp, h, target, pos, aux)
+        upd, opt_state = opt.update(g, opt_state, bw)
+        return apply_updates(bw, upd), opt_state, loss
+
+    @jax.jit
+    def eval_loss(bw, mask_bp, h, target, pos, aux):
+        return loss_fn(bw, mask_bp, h, target, pos, aux)
+
+    return opt, step, eval_loss
+
+
+def tune_block(
+    model,
+    i: int,
+    bp: Params,
+    mask_bp: Params,
+    data: List[Tuple],  # [(h, target, pos, aux), ...] microbatches
+    ecfg: EBFTConfig,
+    step_cache: Dict,
+) -> Tuple[Params, BlockReport]:
+    kind = R.block_kind(model, i)
+    if kind not in step_cache:
+        step_cache[kind] = _make_tune_step(model, i, ecfg)
+    opt, step, eval_loss = step_cache[kind]
+
+    before = float(
+        np.mean([float(eval_loss(bp, mask_bp, *mb)) for mb in data])
+    )
+    opt_state = opt.init(bp)
+    history: List[float] = [before]
+    epochs_run = 0
+    for _ in range(ecfg.epochs):
+        ep = 0.0
+        for mb in data:
+            bp, opt_state, loss = step(bp, opt_state, mask_bp, *mb)
+            ep += float(loss)
+        epochs_run += 1
+        history.append(ep / max(len(data), 1))
+        if plateau_early_stop(history, ecfg.patience, ecfg.rel_tol):
+            break
+    after = float(np.mean([float(eval_loss(bp, mask_bp, *mb)) for mb in data]))
+    bp = apply_masks(bp, mask_bp)
+    return bp, BlockReport(i, kind, epochs_run, before, after)
+
+
+# ---------------------------------------------------------------------------
+def finetune(
+    model,
+    dense_params: Params,
+    pruned_params: Params,
+    masks: Params,
+    calib: np.ndarray,
+    ecfg: Optional[EBFTConfig] = None,
+    extra_batch: Optional[Dict[str, np.ndarray]] = None,
+    log: Optional[Callable[[str], None]] = None,
+) -> Tuple[Params, List[BlockReport]]:
+    """The EBFT driver. Returns (fine-tuned sparse params, per-block reports)."""
+    ecfg = ecfg or EBFTConfig()
+    student = apply_masks(pruned_params, masks)
+    reports: List[BlockReport] = []
+    step_cache: Dict = {}
+
+    shared_idx = (
+        model.num_blocks - 1 if model.cfg.family == "hybrid" else None
+    )
+    shared_sites: List[Tuple] = []
+
+    def visit(i, bp, ctx):
+        mask_bp = model.get_block(masks, i)
+        data = list(
+            zip(ctx["h_mb"], ctx["target_mb"], ctx["pos_mb"], ctx["aux_mb"])
+        )
+        if i == shared_idx:
+            shared_sites.extend(data)  # tune once on the union (sum of sites)
+            return None
+        tuned, rep = tune_block(model, i, bp, mask_bp, data, ecfg, step_cache)
+        reports.append(rep)
+        if log:
+            log(
+                f"block {i:3d} [{rep.kind}] epochs={rep.epochs_run} "
+                f"E: {rep.loss_before:.3e} -> {rep.loss_after:.3e}"
+            )
+        return tuned
+
+    result = C.walk_blocks(
+        model,
+        dense_params,
+        calib,
+        visit,
+        microbatch=ecfg.microbatch,
+        extra_batch=extra_batch,
+        params_student=student,
+        dual_stream=True,
+    )
+
+    if shared_idx is not None and shared_sites:
+        bp = model.get_block(result, shared_idx)
+        mask_bp = model.get_block(masks, shared_idx)
+        tuned, rep = tune_block(
+            model, shared_idx, bp, mask_bp, shared_sites, ecfg, step_cache
+        )
+        reports.append(rep)
+        if log:
+            log(
+                f"shared block [{rep.kind}] ({len(shared_sites)} site-batches) "
+                f"E: {rep.loss_before:.3e} -> {rep.loss_after:.3e}"
+            )
+        result = model.set_block(result, shared_idx, tuned)
+    return result, reports

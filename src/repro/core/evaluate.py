@@ -1,0 +1,68 @@
+"""Evaluation: held-out perplexity (Wikitext2 stand-in) and the synthetic
+cloze ranking task (zero-shot-suite stand-in, Tab. 3)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any
+
+
+def perplexity(
+    model,
+    params: Params,
+    tokens: np.ndarray,  # (N, S)
+    microbatch: int = 8,
+    extra_batch: Optional[Dict[str, np.ndarray]] = None,
+) -> float:
+    """exp(mean next-token NLL) over the evaluation segments."""
+
+    @jax.jit
+    def nll(p, batch):
+        loss, m = model.loss(p, batch)
+        return m["nll"] if "nll" in m else loss
+
+    tot, n = 0.0, 0
+    for s in range(0, tokens.shape[0], microbatch):
+        batch = {"tokens": jnp.asarray(tokens[s : s + microbatch])}
+        if extra_batch:
+            for k, v in extra_batch.items():
+                batch[k] = jnp.asarray(v[s : s + microbatch])
+        b = batch["tokens"].shape[0]
+        tot += float(nll(params, batch)) * b
+        n += b
+    return float(np.exp(tot / max(n, 1)))
+
+
+def cloze_accuracy(
+    model,
+    params: Params,
+    ctx: np.ndarray,        # (N, S)
+    true_next: np.ndarray,  # (N,)
+    distract: np.ndarray,   # (N,)
+    microbatch: int = 8,
+    extra_batch: Optional[Dict[str, np.ndarray]] = None,
+) -> float:
+    """Fraction of samples where the model ranks the true continuation
+    above the distractor at the final position."""
+
+    @jax.jit
+    def last_logits(p, batch):
+        return model.forward(p, batch)[:, -1]
+
+    correct, n = 0, 0
+    for s in range(0, ctx.shape[0], microbatch):
+        batch = {"tokens": jnp.asarray(ctx[s : s + microbatch])}
+        if extra_batch:
+            for k, v in extra_batch.items():
+                batch[k] = jnp.asarray(v[s : s + microbatch])
+        lg = last_logits(params, batch)
+        t = jnp.asarray(true_next[s : s + microbatch])
+        d = jnp.asarray(distract[s : s + microbatch])
+        idx = jnp.arange(lg.shape[0])
+        correct += int(jnp.sum(lg[idx, t] > lg[idx, d]))
+        n += lg.shape[0]
+    return correct / max(n, 1)

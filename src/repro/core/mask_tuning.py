@@ -1,0 +1,165 @@
+"""Mask tuning (paper §4.5 ablation): move masks, freeze weights.
+
+Same block-wise walk and Eq. 4 objective as EBFT, but the optimization
+variable is a continuous score tensor per prunable leaf; the forward pass
+hard-thresholds scores into a mask at the target sparsity (per-output
+top-k, or per-group for N:M) and a straight-through estimator passes the
+gradient to the scores. Weights never change — exactly the strategy DSnoT
+/ lottery-jackpots use, which the paper shows loses to weight tuning
+(Tab. 6), a result our benchmarks reproduce.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import reconstruction as R
+from repro.core.ebft import EBFTConfig
+from repro.core.pruning import common as C
+from repro.optim.optimizers import adam, apply_updates
+from repro.optim.schedules import plateau_early_stop
+from repro.sparsity import sparse_params as SP
+
+Params = Any
+
+
+@jax.custom_vjp
+def _ste(mask: jax.Array, scores: jax.Array) -> jax.Array:
+    return mask
+
+
+def _ste_fwd(mask, scores):
+    return mask, None
+
+
+def _ste_bwd(_, g):
+    return None, g  # straight-through: d mask / d scores = 1
+
+
+_ste.defvjp(_ste_fwd, _ste_bwd)
+
+
+def _hard_mask(name: str, scores_mat: jax.Array, sparsity: float, pattern):
+    if pattern is not None:
+        if name == "conv_w":
+            return jnp.ones_like(scores_mat)
+        return SP.nm_mask(scores_mat, *pattern)
+    return SP.topk_mask_rows(scores_mat, sparsity)
+
+
+def _masked_block(bp: Params, scores: Params, sparsity: float, pattern) -> Params:
+    """W_eff = W ⊙ STE(hard_mask(scores)) on prunable leaves."""
+
+    def g(path, w, s):
+        if not SP.is_prunable(path, w):
+            return w
+        name = SP._path_names(path)[-1]
+        sm, tag = SP.to_matrix(name, s)
+        # the hard threshold itself is non-differentiable — gradients reach
+        # the scores only through the STE, never through the sort
+        hard = _hard_mask(name, jax.lax.stop_gradient(sm), sparsity, pattern)
+        m = SP.from_matrix(_ste(hard, sm), tag)
+        return w * m.astype(w.dtype)
+
+    return jax.tree_util.tree_map_with_path(g, bp, scores)
+
+
+def _final_masks(bp: Params, scores: Params, sparsity: float, pattern) -> Params:
+    def g(path, w, s):
+        if not SP.is_prunable(path, w):
+            return jnp.ones(w.shape, jnp.float32)
+        name = SP._path_names(path)[-1]
+        sm, tag = SP.to_matrix(name, s)
+        return SP.from_matrix(_hard_mask(name, sm, sparsity, pattern), tag)
+
+    return jax.tree_util.tree_map_with_path(g, bp, scores)
+
+
+# ---------------------------------------------------------------------------
+def finetune_masks(
+    model,
+    dense_params: Params,
+    init_masks: Params,
+    sparsity: float,
+    calib: np.ndarray,
+    ecfg: Optional[EBFTConfig] = None,
+    pattern: Optional[Tuple[int, int]] = None,
+    extra_batch=None,
+    log=None,
+    bonus: float = 0.1,
+) -> Tuple[Params, Params]:
+    """Returns (mask-tuned sparse params, tuned masks). Weights = dense
+    weights under the tuned masks (mask tuning never updates values).
+
+    ``bonus`` is added to the initially-kept slots' scores so the starting
+    hard mask ≈ the init mask; it is deliberately small relative to the
+    reachable score movement (lr × steps) — a large bonus freezes the mask
+    (no flips → the frozen-weight loss cannot move at all).
+    """
+    ecfg = ecfg or EBFTConfig(lr=2e-2)  # scores need a larger step than weights
+    masks = init_masks
+    student = SP.apply_masks(dense_params, masks)
+    step_cache: Dict = {}
+
+    def make_step(kind_rep_i):
+        opt = adam(ecfg.lr)
+
+        def loss_fn(scores, bp, h, target, pos, aux):
+            bw = _masked_block(bp, scores, sparsity, pattern)
+            out = model.apply_block(None, kind_rep_i, bw, h, pos, **aux)
+            return jnp.mean(jnp.square((out - target).astype(jnp.float32)))
+
+        vg = jax.value_and_grad(loss_fn)
+
+        @jax.jit
+        def step(scores, opt_state, bp, h, target, pos, aux):
+            loss, g = vg(scores, bp, h, target, pos, aux)
+            upd, opt_state = opt.update(g, opt_state, scores)
+            return apply_updates(scores, upd), opt_state, loss
+
+        return opt, step
+
+    def visit(i, bp, ctx):
+        nonlocal masks
+        kind = R.block_kind(model, i)
+        if kind not in step_cache:
+            step_cache[kind] = make_step(i)
+        opt, step = step_cache[kind]
+
+        dense_bp = model.get_block(dense_params, i)
+        mask_bp = model.get_block(masks, i)
+        # scores init: per-column-normalized |W| + small bonus on kept slots
+        def s0(path, w, m):
+            if not SP.is_prunable(path, w):
+                return jnp.zeros(w.shape, jnp.float32)
+            a = jnp.abs(w.astype(jnp.float32))
+            a = a / jnp.maximum(a.max(), 1e-9)
+            return a + bonus * m.astype(jnp.float32)
+
+        scores = jax.tree_util.tree_map_with_path(s0, dense_bp, mask_bp)
+        opt_state = opt.init(scores)
+        data = list(zip(ctx["h_mb"], ctx["target_mb"], ctx["pos_mb"], ctx["aux_mb"]))
+        history: List[float] = []
+        for _ in range(ecfg.epochs):
+            ep = 0.0
+            for h, t, p, a in data:
+                scores, opt_state, loss = step(scores, opt_state, dense_bp, h, t, p, a)
+                ep += float(loss)
+            history.append(ep / max(len(data), 1))
+            if plateau_early_stop(history, ecfg.patience, ecfg.rel_tol):
+                break
+        mask_bp = _final_masks(dense_bp, scores, sparsity, pattern)
+        masks = model.set_block(masks, i, mask_bp)
+        if log:
+            log(f"mask-tune block {i}: E {history[0]:.3e} -> {history[-1]:.3e}")
+        return SP.apply_masks(dense_bp, mask_bp)
+
+    result = C.walk_blocks(
+        model, dense_params, calib, visit, microbatch=ecfg.microbatch,
+        extra_batch=extra_batch, params_student=student, dual_stream=True,
+    )
+    return result, masks

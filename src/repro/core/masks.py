@@ -1,0 +1,195 @@
+"""Unified pruning driver: ``prune(model, params, calib, method, ...)``.
+
+Produces (masks, pruned_params) for any of the five methods. The stream
+walk follows the official Wanda/SparseGPT convention (inputs propagate
+through already-pruned blocks); magnitude needs no data; FLAP does a
+two-pass walk (scores first — they're ranked globally — then masks).
+
+Masks here are *full* pytrees (ones for every leaf, 0/1 arrays on pruned
+leaves) so the model's own get_block/set_block slice them like params.
+``pruned_params`` always stores masked weights (zeros at pruned slots):
+the invariant EBFT, serving, and the N:M compressor rely on.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pruning import common as C
+from repro.core.pruning import dsnot as DSNOT
+from repro.core.pruning import flap as FLAP
+from repro.core.pruning import magnitude as MAG
+from repro.core.pruning import sparsegpt as SGPT
+from repro.core.pruning import wanda as WANDA
+from repro.sparsity import sparse_params as SP
+
+Params = Any
+
+
+def full_ones_masks(params: Params) -> Params:
+    return jax.tree.map(lambda p: jnp.ones(p.shape, jnp.float32), params)
+
+
+def _set_path(tree, names, value):
+    """Functional set of a nested-dict path."""
+    if len(names) == 1:
+        return {**tree, names[0]: value}
+    return {**tree, names[0]: _set_path(tree[names[0]], names[1:], value)}
+
+
+def _get_path(tree, names):
+    for n in names:
+        tree = tree[n]
+    return tree
+
+
+def prune(
+    model,
+    params: Params,
+    calib: Optional[np.ndarray],
+    method: str = "wanda",
+    sparsity: float = 0.5,
+    pattern: Optional[Tuple[int, int]] = None,
+    microbatch: int = 8,
+    extra_batch: Optional[Dict[str, np.ndarray]] = None,
+    dsnot_init: str = "wanda",
+    dsnot_cycles: int = 30,
+) -> Tuple[Params, Params]:
+    """Returns (masks, pruned_params). ``method`` ∈ {magnitude, wanda,
+    sparsegpt, dsnot, flap}. ``pattern``=(n, m) for N:M sparsity."""
+    if method == "magnitude":
+        masks = expand_masks(
+            params, MAG.make_masks(params, sparsity, pattern)
+        )
+        return masks, SP.apply_masks(params, masks)
+
+    if method == "flap":
+        return _prune_flap(model, params, calib, sparsity, microbatch, extra_batch)
+
+    if method == "dsnot":
+        init_masks, _ = prune(
+            model, params, calib, dsnot_init, sparsity, pattern, microbatch,
+            extra_batch,
+        )
+        return _dsnot_walk(
+            model, params, init_masks, calib, microbatch, extra_batch,
+            dsnot_cycles, pattern,
+        )
+
+    assert method in ("wanda", "sparsegpt"), method
+    want_h = method == "sparsegpt"
+    masks = full_ones_masks(params)
+
+    def visit(i, bp, ctx):
+        nonlocal masks
+        stats = C.collect_block_stats(
+            model, bp, i, ctx["h_mb"], ctx["pos_mb"], ctx["aux_mb"],
+            want_hessian=want_h,
+        )
+        mask_bp = model.get_block(masks, i)
+        new_bp = bp
+
+        def g(path, leaf):
+            nonlocal mask_bp, new_bp
+            if not SP.is_prunable(path, leaf):
+                return leaf
+            names = SP._path_names(path)
+            st = C.stats_for_leaf(stats, names)
+            if method == "wanda":
+                mk = WANDA.leaf_mask(names[-1], leaf, st, sparsity, pattern)
+                nw = leaf * mk.astype(leaf.dtype)
+            else:
+                nw, mk = SGPT.leaf_prune(names[-1], leaf, st, sparsity, pattern)
+                nw = nw.astype(leaf.dtype)
+            mask_bp = _set_path(mask_bp, names, mk)
+            new_bp = _set_path(new_bp, names, nw)
+            return leaf
+
+        jax.tree_util.tree_map_with_path(g, bp)
+        masks = model.set_block(masks, i, mask_bp)
+        return new_bp
+
+    pruned = C.walk_blocks(
+        model, params, calib, visit, microbatch, extra_batch,
+        params_student=jax.tree.map(lambda x: x, params),
+    )
+    return masks, pruned
+
+
+# ---------------------------------------------------------------------------
+def _dsnot_walk(model, params, init_masks, calib, microbatch, extra_batch, cycles, pattern):
+    masks = init_masks
+
+    def visit(i, bp, ctx):
+        nonlocal masks
+        stats = C.collect_block_stats(
+            model, bp, i, ctx["h_mb"], ctx["pos_mb"], ctx["aux_mb"],
+            want_hessian=False,
+        )
+        mask_bp = model.get_block(masks, i)
+        dense_bp = model.get_block(params, i)
+        new_bp = bp
+
+        def g(path, leaf):
+            nonlocal mask_bp, new_bp
+            if not SP.is_prunable(path, leaf):
+                return leaf
+            names = SP._path_names(path)
+            st = C.stats_for_leaf(stats, names)
+            mk_old = _get_path(mask_bp, names)
+            dense_leaf = _get_path(dense_bp, names)
+            mk = DSNOT.leaf_reselect(names[-1], dense_leaf, mk_old, st, cycles, pattern)
+            mask_bp = _set_path(mask_bp, names, mk)
+            new_bp = _set_path(new_bp, names, dense_leaf * mk.astype(leaf.dtype))
+            return leaf
+
+        jax.tree_util.tree_map_with_path(g, bp)
+        masks = model.set_block(masks, i, mask_bp)
+        return new_bp
+
+    pruned = C.walk_blocks(
+        model, params, calib, visit, microbatch, extra_batch,
+        params_student=SP.apply_masks(params, init_masks),
+    )
+    return masks, pruned
+
+
+# ---------------------------------------------------------------------------
+def _prune_flap(model, params, calib, sparsity, microbatch, extra_batch):
+    cfg = model.cfg
+    assert cfg.family in ("dense", "vlm"), "FLAP targets attention+MLP stacks"
+    scores = []
+
+    def score_visit(i, bp, ctx):
+        stats = C.collect_block_stats(
+            model, bp, i, ctx["h_mb"], ctx["pos_mb"], ctx["aux_mb"],
+            want_hessian=False,
+        )
+        scores.append(FLAP.block_unit_scores(bp, stats, cfg))
+        return None  # pass 1: dense stream, no modification
+
+    C.walk_blocks(model, params, calib, score_visit, microbatch, extra_batch)
+    unit_masks = FLAP.global_structured_masks(scores, sparsity)
+
+    masks = full_ones_masks(params)
+    for i, unit in enumerate(unit_masks):
+        bp = model.get_block(params, i)
+        mask_bp = model.get_block(masks, i)
+        mask_bp = FLAP.expand_block_masks(bp, unit, mask_bp)
+        masks = model.set_block(masks, i, mask_bp)
+    return masks, SP.apply_masks(params, masks)
+
+
+# ---------------------------------------------------------------------------
+def expand_masks(params: Params, masks: Params) -> Params:
+    """Scalar-placeholder masks -> full arrays (so block slicing works)."""
+
+    def g(path, m, p):
+        if getattr(m, "ndim", 0) == 0:
+            return jnp.ones(p.shape, jnp.float32) * m
+        return m
+
+    return jax.tree_util.tree_map_with_path(g, masks, params)

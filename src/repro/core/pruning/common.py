@@ -1,0 +1,230 @@
+"""Shared machinery for the calibration-based pruning methods.
+
+All methods (magnitude / Wanda / SparseGPT / DSnoT / FLAP) are *layer-wise*
+inside a *block-wise* walk: the dense hidden stream is propagated block by
+block over the calibration set D_c, the per-linear input activations are
+tapped (sparsity/taps.py), and per-leaf statistics are accumulated:
+
+    n        total tokens seen
+    sum      Σ_t X[t]              (R,)   — DSnoT's signed expected input
+    sumsq    Σ_t X[t]²             (R,)   — Wanda's ‖X_j‖₂², FLAP fluctuation
+    hessian  Σ_t X[t] X[t]ᵀ        (R,R)  — SparseGPT's Gram (opt-in)
+
+Expert-batched leaves get an extra leading E axis on every stat.
+
+The walk processes the calibration set in microbatches, so peak memory is
+one block + one microbatch of activations — the same 16 GB-GPU streaming
+property the paper exploits, expressed in JAX.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import reconstruction as R
+from repro.sparsity import sparse_params as SP
+from repro.sparsity.taps import taps_for_block
+
+Params = Any
+
+
+def tap_key(path_names: Tuple[str, ...]) -> str:
+    """Map a block-param leaf path to its taps-dict key."""
+    return "/".join(path_names[-2:])
+
+
+def lookup_tap(taps: Dict[str, jax.Array], names: Tuple[str, ...]):
+    k2 = tap_key(names)
+    if k2 in taps:
+        return taps[k2]
+    return taps.get(names[-1])
+
+
+def iter_prunable(block_params: Params):
+    """Yields (path_names, leaf) for every prunable leaf of a block."""
+    out = []
+
+    def g(path, leaf):
+        if SP.is_prunable(path, leaf):
+            out.append((SP._path_names(path), leaf))
+        return leaf
+
+    jax.tree_util.tree_map_with_path(g, block_params)
+    return out
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class LeafStats:
+    n: float
+    sum: jax.Array      # (R,) or (E, R)
+    sumsq: jax.Array    # (R,) or (E, R)
+    hessian: Optional[jax.Array] = None  # (R, R) or (E, R, R)
+
+    @property
+    def mean(self):
+        return self.sum / max(self.n, 1.0)
+
+    @property
+    def col_norm(self):
+        return jnp.sqrt(jnp.maximum(self.sumsq, 0.0))
+
+    @property
+    def fluctuation(self):
+        """Σ (X - mean)² per column (FLAP's variance mass)."""
+        return jnp.maximum(self.sumsq - self.n * jnp.square(self.mean), 0.0)
+
+
+def _acc_stats(x: jax.Array, want_hessian: bool) -> LeafStats:
+    """x: (T, R) or (E, C, R) activation matrix for one microbatch."""
+    x32 = x.astype(jnp.float32)
+    if x.ndim == 3:  # expert-batched
+        n = float(x.shape[1])
+        s = x32.sum(axis=1)
+        ss = jnp.square(x32).sum(axis=1)
+        h = jnp.einsum("ecr,ecs->ers", x32, x32) if want_hessian else None
+    else:
+        n = float(x.shape[0])
+        s = x32.sum(axis=0)
+        ss = jnp.square(x32).sum(axis=0)
+        h = x32.T @ x32 if want_hessian else None
+    return LeafStats(n, s, ss, h)
+
+
+def _merge(a: Optional[LeafStats], b: LeafStats) -> LeafStats:
+    if a is None:
+        return b
+    h = None
+    if b.hessian is not None:
+        h = (a.hessian if a.hessian is not None else 0) + b.hessian
+    return LeafStats(a.n + b.n, a.sum + b.sum, a.sumsq + b.sumsq, h)
+
+
+# ---------------------------------------------------------------------------
+def collect_block_stats(
+    model,
+    bp: Params,
+    block_index: int,
+    h_mb: List[jax.Array],
+    pos_mb: List[jax.Array],
+    aux_mb: List[Dict],
+    want_hessian: bool = False,
+) -> Dict[str, LeafStats]:
+    """Run taps over each microbatch of the stream; accumulate stats."""
+    cfg = model.cfg
+    tapfn = taps_for_block(cfg, block_index, model.num_blocks)
+    tap_jit = jax.jit(lambda bp_, h_, p_, aux_: tapfn(bp_, cfg, h_, p_, **aux_))
+
+    stats: Dict[str, LeafStats] = {}
+    for h, pos, aux in zip(h_mb, pos_mb, aux_mb):
+        taps = tap_jit(bp, h, pos, aux)
+        for key, x in taps.items():
+            stats[key] = _merge(stats.get(key), _acc_stats(x, want_hessian))
+    return stats
+
+
+def stats_for_leaf(stats: Dict[str, LeafStats], names: Tuple[str, ...]) -> Optional[LeafStats]:
+    k2 = tap_key(names)
+    if k2 in stats:
+        return stats[k2]
+    return stats.get(names[-1])
+
+
+# ---------------------------------------------------------------------------
+# The block-by-block walk shared by the pruning drivers and EBFT.
+# ---------------------------------------------------------------------------
+def walk_blocks(
+    model,
+    params: Params,
+    calib: np.ndarray,  # (N, S) token segments
+    visit_fn: Callable,  # (block_index, bp, stream_ctx) -> new bp or None
+    microbatch: int = 8,
+    extra_batch: Optional[Dict[str, np.ndarray]] = None,
+    params_student: Optional[Params] = None,
+    dual_stream: bool = False,
+):
+    """Block-by-block calibration walk.
+
+    Single-stream mode (pruning: Wanda/SparseGPT/DSnoT convention): one
+    stream advances through the *already-updated* blocks; each visit sees
+    that stream as input and the dense block's output on the same input as
+    ``target_mb``.
+
+    Dual-stream mode (EBFT, Eq. 3/4): the teacher stream propagates through
+    the dense ``params`` and the student stream through
+    ``params_student``; visits see student inputs (``h_mb``) and pure
+    teacher outputs (``target_mb``).
+
+    stream_ctx fields: h_mb, pos_mb, aux_mb, target_mb, site.
+    Returns the updated student/pruned params.
+    """
+    out_params = params_student if params_student is not None else params
+    batch_all = _make_batches(model.cfg, calib, extra_batch, microbatch)
+
+    adv = jax.jit(
+        lambda bp, h, pos, aux, i: model.apply_block(None, i, bp, h, pos, **aux),
+        static_argnames=("i",),
+    )
+
+    for seg in R.execution_plan(model):
+        h0_jit = jax.jit(seg.h0)
+        aux_jit = jax.jit(seg.aux)
+        hs_mb, ht_mb, pos_mb, aux_s, aux_t = [], [], [], [], []
+        for b in batch_all:
+            h, pos = h0_jit(params, b)
+            ht_mb.append(h)
+            pos_mb.append(pos)
+            aux_t.append(aux_jit(params, b))
+            if dual_stream:
+                h_s, _ = h0_jit(out_params, b)
+                hs_mb.append(h_s)
+                aux_s.append(aux_jit(out_params, b))
+        if not dual_stream:
+            hs_mb, aux_s = ht_mb, aux_t
+
+        for (i, site) in seg.visits:
+            dense_bp = model.get_block(params, i)
+            # teacher/“dense on same input” targets
+            target_mb = [
+                adv(dense_bp, h, p, a, i)
+                for h, p, a in zip(
+                    (ht_mb if dual_stream else hs_mb), pos_mb,
+                    (aux_t if dual_stream else aux_s),
+                )
+            ]
+            bp = model.get_block(out_params, i)
+            ctx = dict(
+                h_mb=hs_mb, pos_mb=pos_mb, aux_mb=aux_s, target_mb=target_mb,
+                site=site,
+            )
+            new_bp = visit_fn(i, bp, ctx)
+            if new_bp is not None:
+                out_params = model.set_block(out_params, i, new_bp)
+                bp = new_bp
+            # advance streams
+            if dual_stream:
+                ht_mb = target_mb
+                hs_mb = [
+                    adv(bp, h, p, a, i) for h, p, a in zip(hs_mb, pos_mb, aux_s)
+                ]
+            else:
+                hs_mb = ht_mb = [
+                    adv(bp, h, p, a, i) for h, p, a in zip(hs_mb, pos_mb, aux_s)
+                ]
+    return out_params
+
+
+def _make_batches(cfg, calib, extra_batch, microbatch: int) -> List[Dict[str, jax.Array]]:
+    n = calib.shape[0]
+    out = []
+    for s in range(0, n, microbatch):
+        b = {"tokens": jnp.asarray(calib[s : s + microbatch])}
+        if extra_batch:
+            for k, v in extra_batch.items():
+                b[k] = jnp.asarray(v[s : s + microbatch])
+        out.append(b)
+    return out

@@ -1,0 +1,87 @@
+"""DSnoT (Zhang et al. 2023d): training-free mask reselection.
+
+Baseline the paper compares EBFT against. Starting from any initial mask,
+DSnoT iteratively swaps (grow one pruned weight, prune one kept weight)
+per output unit to shrink the *expected* reconstruction error
+
+    E_o = Σ_{pruned r} W[r,o] · μ_r ,   μ_r = E[X_r]  (calibration mean)
+
+Growing restores the pruned weight whose lost contribution best cancels
+E_o (signed criterion); pruning removes the kept weight with the smallest
+Wanda score among those whose removal also pushes E_o toward zero. A swap
+is committed only when it strictly reduces |E_o| — when no swap helps, the
+output unit is converged (the paper's early-stop per row). Weights are
+never updated — DSnoT is mask-only, which is exactly the limitation EBFT's
+weight tuning fixes (paper §4.5).
+
+Under N:M, swaps are restricted to the grow-candidate's own M-group so the
+pattern is preserved.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sparsity import sparse_params as SP
+
+_BIG = 1e30
+
+
+def reselect(
+    W: jnp.ndarray,        # (R, O) canonical weights
+    mask: jnp.ndarray,     # (R, O) initial mask
+    mean: jnp.ndarray,     # (R,) calibration mean inputs
+    col_norm: jnp.ndarray, # (R,) calibration ‖X_r‖₂ (Wanda prune criterion)
+    cycles: int = 30,
+    pattern: Optional[Tuple[int, int]] = None,
+) -> jnp.ndarray:
+    R, O = W.shape
+    W = W.astype(jnp.float32)
+    c = W * mean.astype(jnp.float32)[:, None]          # contribution if kept
+    wanda = jnp.abs(W) * col_norm.astype(jnp.float32)[:, None]
+    if pattern is not None:
+        group = jnp.arange(R) // pattern[1]            # (R,)
+
+    def body(mask, _):
+        E = ((1.0 - mask) * c).sum(axis=0)             # (O,)
+        sgn = jnp.sign(E)
+        # --- grow: pruned weight whose restoration reduces |E| the most
+        gain_g = jnp.where(mask < 0.5, c * sgn[None, :], -_BIG)
+        r_g = jnp.argmax(gain_g, axis=0)               # (O,)
+        g_gain = jnp.take_along_axis(gain_g, r_g[None, :], axis=0)[0]
+        # --- prune: kept weight; its removal adds c to E, so require
+        # c·sgn < 0 (pushes E toward zero); among those, smallest Wanda score
+        push_ok = (c * sgn[None, :]) < 0
+        cand = (mask > 0.5) & push_ok
+        if pattern is not None:
+            same_group = group[:, None] == group[r_g][None, :]
+            cand = cand & same_group
+        score = jnp.where(cand, wanda, _BIG)
+        r_p = jnp.argmin(score, axis=0)                # (O,)
+        p_cost = jnp.take_along_axis(c * sgn[None, :], r_p[None, :], axis=0)[0]
+        has_p = jnp.take_along_axis(cand, r_p[None, :], axis=0)[0]
+
+        newE_abs = jnp.abs(jnp.abs(E) - g_gain + p_cost)
+        do = has_p & (g_gain > 0) & (newE_abs < jnp.abs(E))
+        oi = jnp.arange(O)
+        grown = mask.at[r_g, oi].set(jnp.where(do, 1.0, mask[r_g, oi]))
+        swapped = grown.at[r_p, oi].set(jnp.where(do, 0.0, grown[r_p, oi]))
+        return swapped, None
+
+    mask, _ = jax.lax.scan(body, mask.astype(jnp.float32), None, length=cycles)
+    return mask
+
+
+def leaf_reselect(name: str, leaf, mask_leaf, stats, cycles=30, pattern=None):
+    if stats is None or name == "conv_w":
+        return mask_leaf  # nothing to re-select without taps
+    mat, tag = SP.to_matrix(name, leaf)
+    mk, _ = SP.to_matrix(name, mask_leaf)
+    if mat.ndim == 3:  # expert-batched
+        fn = jax.vmap(lambda w, m, mu, cn: reselect(w, m, mu, cn, cycles, pattern))
+        new = fn(mat, mk, stats.mean, stats.col_norm)
+    else:
+        new = reselect(mat, mk, stats.mean, stats.col_norm, cycles, pattern)
+    return SP.from_matrix(new, tag)

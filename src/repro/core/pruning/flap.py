@@ -1,0 +1,116 @@
+"""FLAP (An et al. 2023): fluctuation-based adaptive structured pruning.
+
+Structured units are attention heads and MLP hidden channels. Each unit's
+importance is the *fluctuation* of its input feature around the
+calibration mean, weighted by the squared norm of the weights that consume
+it:
+
+    head  h:  Σ_{cols j∈h}  Var-mass(X_j) · ‖W_o[j, :]‖²
+    chan  j:  Var-mass(X_j) · ‖W_down[j, :]‖²
+
+Scores are standardized per layer (FLAP's cross-layer normalization) and a
+single global threshold selects which units go, "adaptively" distributing
+sparsity across layers. Masks stay elementwise (broadcast from unit masks)
+so EBFT / LoRA fine-tuning consume them unchanged.
+
+Note (DESIGN.md §7): FLAP's bias compensation is skipped — our blocks are
+bias-free; recovery is delegated to the fine-tuning stage, which is
+precisely the EBFT-vs-LoRA comparison of paper Tab. 4/5. Applies to
+standard attention+MLP blocks (the paper uses it on Llama).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = dict
+
+
+def block_unit_scores(bp: Params, stats, cfg) -> Dict[str, jnp.ndarray]:
+    """Per-unit fluctuation scores for one attention+MLP block."""
+    out: Dict[str, jnp.ndarray] = {}
+    # attention heads: wo is (H, hd, d); taps "wo" give (T, H*hd) stats
+    st_o = stats.get("wo")
+    if st_o is not None:
+        H, hd, d = bp["attn"]["wo"].shape
+        fluct = st_o.fluctuation.reshape(H, hd)            # (H, hd)
+        wnorm = jnp.sum(jnp.square(bp["attn"]["wo"].astype(jnp.float32)), axis=2)
+        out["heads"] = jnp.sum(fluct * wnorm, axis=1)      # (H,)
+    # MLP channels: w_down is (ff, d); taps "w_down" give (T, ff) stats
+    st_d = stats.get("w_down")
+    if st_d is not None:
+        wnorm = jnp.sum(jnp.square(bp["mlp"]["w_down"].astype(jnp.float32)), axis=1)
+        out["channels"] = st_d.fluctuation * wnorm         # (ff,)
+    return out
+
+
+def _standardize(x: jnp.ndarray) -> jnp.ndarray:
+    return (x - x.mean()) / jnp.maximum(x.std(), 1e-9)
+
+
+def global_structured_masks(
+    per_block_scores: List[Dict[str, jnp.ndarray]], sparsity: float
+) -> List[Dict[str, jnp.ndarray]]:
+    """Standardize scores per layer, pick one global threshold, return
+    per-block {heads: (H,), channels: (ff,)} 0/1 unit masks."""
+    std_scores = [
+        {k: _standardize(v) for k, v in s.items()} for s in per_block_scores
+    ]
+    allv = jnp.concatenate([v.reshape(-1) for s in std_scores for v in s.values()])
+    k = max(1, int(round(allv.size * (1.0 - sparsity))))
+    thresh = jnp.sort(allv)[-k]
+    out = []
+    for s in std_scores:
+        m = {k_: (v >= thresh).astype(jnp.float32) for k_, v in s.items()}
+        # never prune every head / every channel of a block
+        for k_ in m:
+            m[k_] = jax.lax.cond(
+                m[k_].sum() < 1.0,
+                lambda mm: mm.at[jnp.argmax(s[k_])].set(1.0),
+                lambda mm: mm,
+                m[k_],
+            )
+        out.append(m)
+    return out
+
+
+def expand_block_masks(bp: Params, unit: Dict[str, jnp.ndarray], masks_bp: Params) -> Params:
+    """Broadcast unit masks into the block's elementwise mask pytree."""
+    new = jax.tree.map(lambda m: m, masks_bp)  # copy
+    if "heads" in unit:
+        hm = unit["heads"]                                  # (H,)
+        H, hd, d = bp["attn"]["wo"].shape
+        Hkv = bp["attn"]["wk"].shape[1]
+        new["attn"]["wq"] = jnp.broadcast_to(
+            hm[None, :, None], bp["attn"]["wq"].shape
+        ).astype(jnp.float32)
+        new["attn"]["wo"] = jnp.broadcast_to(
+            hm[:, None, None], bp["attn"]["wo"].shape
+        ).astype(jnp.float32)
+        if Hkv == H:  # MHA: prune kv with the head; GQA: keep shared kv
+            for kname in ("wk", "wv"):
+                new["attn"][kname] = jnp.broadcast_to(
+                    hm[None, :, None], bp["attn"][kname].shape
+                ).astype(jnp.float32)
+    if "channels" in unit:
+        cm = unit["channels"]                               # (ff,)
+        new["mlp"]["w_up"] = jnp.broadcast_to(
+            cm[None, :], bp["mlp"]["w_up"].shape
+        ).astype(jnp.float32)
+        if "w_gate" in bp["mlp"]:
+            new["mlp"]["w_gate"] = jnp.broadcast_to(
+                cm[None, :], bp["mlp"]["w_gate"].shape
+            ).astype(jnp.float32)
+        new["mlp"]["w_down"] = jnp.broadcast_to(
+            cm[:, None], bp["mlp"]["w_down"].shape
+        ).astype(jnp.float32)
+    return new
+
+
+def remaining_param_fraction(masks, params) -> float:
+    from repro.sparsity.sparse_params import sparsity_of
+
+    return 1.0 - sparsity_of(masks, params)

@@ -1,0 +1,42 @@
+"""Magnitude pruning (Han et al. 2015): score = |W|, whole-leaf comparison.
+
+Needs no calibration data — masks come straight from the weights.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.sparsity import sparse_params as SP
+
+
+def leaf_mask(name: str, leaf, sparsity: float, pattern=None):
+    """pattern: None for unstructured, (n, m) for N:M.
+
+    Stack-aware (to_matrix_stacked): whole-tree leaves carry leading
+    (L / G,K / E) axes; scores/masks are computed per stacked slice so
+    the N:M groups and the magnitude comparison group stay per-layer."""
+    mat, tag = SP.to_matrix_stacked(name, leaf)
+    scores = jnp.abs(mat)
+    if pattern is not None:
+        if name == "conv_w":  # 4-tap depthwise conv: N:M degenerate, keep dense
+            return SP.from_matrix(jnp.ones_like(scores), tag)
+        n, m = pattern
+        mask = SP.nm_mask(scores, n, m)
+    else:
+        mask = SP.global_topk_mask(scores, sparsity)
+    return SP.from_matrix(mask, tag)
+
+
+def make_masks(params, sparsity: float, pattern=None):
+    """Whole-model magnitude masks (no data, no stream walk needed)."""
+    def g(name, leaf):
+        return leaf_mask(name, leaf, sparsity, pattern)
+
+    masks = SP.map_prunable(g, params)
+    # non-prunable leaves must carry scalar ones, not the weights themselves
+    import jax
+
+    def fix(path, m, p):
+        return m if SP.is_prunable(path, p) else jnp.ones((), jnp.float32)
+
+    return jax.tree_util.tree_map_with_path(lambda path, m, p: fix(path, m, p), masks, params)

@@ -1,0 +1,37 @@
+"""Wanda (Sun et al. 2023): score_ij = |W_ij| · ‖X_i‖₂.
+
+The comparison group is per-output (each output unit keeps its own top
+(1−s) fraction of inputs), which is Wanda's key design choice. Activation
+column norms come from the calibration walk (pruned-stream convention, as
+in the official implementation).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.sparsity import sparse_params as SP
+
+
+def leaf_scores(name: str, mat, stats):
+    """mat: canonical (R, O) or (E, R, O). stats: LeafStats for this leaf."""
+    norm = stats.col_norm  # (R,) or (E, R)
+    if name == "conv_w":  # taps give per-channel (= output-axis) norms
+        return jnp.abs(mat) * norm[None, :]
+    if mat.ndim == 3:  # expert-batched
+        return jnp.abs(mat) * norm[:, :, None]
+    return jnp.abs(mat) * norm[:, None]
+
+
+def leaf_mask(name: str, leaf, stats, sparsity: float, pattern=None):
+    mat, tag = SP.to_matrix(name, leaf)
+    if stats is None:  # no tap for this leaf — magnitude fallback
+        scores = jnp.abs(mat)
+    else:
+        scores = leaf_scores(name, mat, stats)
+    if pattern is not None:
+        if name == "conv_w":
+            return SP.from_matrix(jnp.ones_like(scores), tag)
+        mask = SP.nm_mask(scores, *pattern)
+    else:
+        mask = SP.topk_mask_rows(scores, sparsity)  # per-output group
+    return SP.from_matrix(mask, tag)

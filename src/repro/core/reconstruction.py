@@ -1,0 +1,130 @@
+"""Block-wise reconstruction machinery (paper Eq. 3/4).
+
+The EBFT objective for block l is
+
+    min_{W̄_l}  || z^l  −  z̄^l ||₂²        (Eq. 4)
+
+where z^l is the *dense teacher's* block-l output and z̄^l is the sparse
+student's block-l output computed from the student's own stream z̄^{l-1}
+(Eq. 3 — the sparse stream propagates, so earlier blocks' residual error
+is visible to later blocks and gets compensated).
+
+This module provides:
+  * ``execution_plan`` — the per-family visit order (which block runs when,
+    including Zamba2's shared block appearing at G sites and Seamless's
+    encoder→decoder segmentation);
+  * ``block_loss`` — the Eq.4 loss for one block given (masked) weights;
+  * stream-advance helpers shared by EBFT, mask-tuning, and the pruning
+    drivers (they all walk the same teacher stream).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sparsity.sparse_params import apply_masks
+
+Params = Any
+
+
+@dataclasses.dataclass
+class Segment:
+    """A contiguous stretch of the model sharing one hidden stream."""
+
+    visits: List[Tuple[int, int]]  # (block_index, site_id) in execution order
+    h0: Callable[[Params, Dict], Tuple[jax.Array, jax.Array]]  # -> (h, positions)
+    aux: Callable[[Params, Dict], Dict[str, jax.Array]]  # e.g. encoder memory
+
+
+def execution_plan(model) -> List[Segment]:
+    cfg = model.cfg
+    fam = cfg.family
+
+    def default_h0(params, batch):
+        return model.embed_tokens(params, batch)
+
+    no_aux = lambda params, batch: {}
+
+    if fam == "hybrid":
+        # mamba blocks interleaved with the shared attention block (index
+        # num_blocks-1) at every hybrid_attn_every layers; trailing mambas.
+        K = cfg.hybrid_attn_every
+        G = cfg.num_layers // K
+        shared = model.num_blocks - 1
+        visits: List[Tuple[int, int]] = []
+        for g in range(G):
+            visits += [(g * K + j, 0) for j in range(K)]
+            visits.append((shared, g))
+        visits += [(i, 0) for i in range(G * K, cfg.num_layers)]
+        return [Segment(visits, default_h0, no_aux)]
+
+    if fam == "encdec":
+        from repro.models import encdec as ED
+
+        n_enc = cfg.enc_layers
+
+        def enc_h0(params, batch):
+            frames = batch["frames"].astype(jnp.dtype(cfg.dtype))
+            return frames, jnp.arange(frames.shape[1])[None, :]
+
+        def dec_aux(params, batch):
+            # memory from *this* param set: teacher uses dense encoder,
+            # student uses its (already fine-tuned) sparse encoder.
+            return {"memory": ED.encode(params, cfg, batch["frames"])}
+
+        enc = Segment([(i, 0) for i in range(n_enc)], enc_h0, no_aux)
+        dec = Segment(
+            [(i, 0) for i in range(n_enc, model.num_blocks)], default_h0, dec_aux
+        )
+        return [enc, dec]
+
+    return [Segment([(i, 0) for i in range(model.num_blocks)], default_h0, no_aux)]
+
+
+# ---------------------------------------------------------------------------
+def block_kind(model, i: int) -> str:
+    """Blocks of the same kind share one compiled tune/advance step —
+    apply_block's behaviour depends only on the kind, never on i itself."""
+    cfg = model.cfg
+    if cfg.family == "moe":
+        return "dense" if i < cfg.moe_first_dense else "moe"
+    if cfg.family == "hybrid":
+        return "shared" if i == model.num_blocks - 1 else "mamba"
+    if cfg.family == "encdec":
+        return "enc" if i < cfg.enc_layers else "dec"
+    return "block"
+
+
+def advance(model, params, i: int, h: jax.Array, positions, aux: Dict) -> jax.Array:
+    """Apply block ``i`` with its own stored weights."""
+    bp = model.get_block(params, i)
+    return model.apply_block(params, i, bp, h, positions, **aux)
+
+
+def advance_with(model, params, i: int, bp, h, positions, aux: Dict) -> jax.Array:
+    """Apply block ``i`` with explicit block weights ``bp``."""
+    return model.apply_block(params, i, bp, h, positions, **aux)
+
+
+def block_loss(
+    model, i: int, bw: Params, masks_b: Params, h_in, target, positions, aux: Dict
+) -> jax.Array:
+    """Eq. 4: mean-squared block-output reconstruction error for block i.
+
+    ``bw`` are the block's trainable weights; ``masks_b`` the block's frozen
+    masks (W̄ = M ⊙ W). Mean (not sum) keeps lr scale-free across shapes.
+    """
+    out = model.apply_block(None, i, apply_masks(bw, masks_b), h_in, positions, **aux)
+    err = (out - target).astype(jnp.float32)
+    return jnp.mean(jnp.square(err))
+
+
+def reconstruction_error(model, i, bw, masks_b, h_in, target, positions, aux) -> jax.Array:
+    """Reported metric: relative block error ‖z−z̄‖₂ / ‖z‖₂."""
+    out = model.apply_block(None, i, apply_masks(bw, masks_b), h_in, positions, **aux)
+    num = jnp.linalg.norm((out - target).astype(jnp.float32))
+    den = jnp.maximum(jnp.linalg.norm(target.astype(jnp.float32)), 1e-9)
+    return num / den

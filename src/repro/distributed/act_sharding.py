@@ -1,0 +1,79 @@
+"""Activation-sharding constraints for distribution-agnostic model code.
+
+Measured pathology (dry-run, every attention arch): the chunked-attention
+scan carries (m, l, acc) are initialized with ``jnp.full``/``jnp.zeros``
+— replicated constants. GSPMD infers the while-loop carry sharding from
+that init, so the carry becomes batch-REPLICATED, which drags q/k/v and
+the scores into batch-replicated form inside the loop: every device
+computes attention for the WHOLE microbatch (16x redundant compute on the
+256-chip mesh) and re-shards h at the loop boundary (activation-sized
+all-gathers across data).
+
+Model code stays mesh-agnostic: it tags tensors with a dims string
+("bqhd", "bhq", ...) via ``constrain``; the launcher installs a policy
+that maps 'b' -> the batch mesh axes and 'h' -> the model axis (when the
+head count divides it). Without a policy the call is a no-op, so tests
+and single-device runs are untouched.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Callable, Optional
+
+_POLICY: contextvars.ContextVar[Optional[Callable]] = contextvars.ContextVar(
+    "act_sharding_policy", default=None
+)
+
+
+def constrain(x, dims: str):
+    """dims: one char per axis of x — 'b' batch, 'h' heads, 'q'/'k' seq,
+    'd' head_dim/feature, '.' unconstrained."""
+    pol = _POLICY.get()
+    return pol(x, dims) if pol is not None else x
+
+
+@contextlib.contextmanager
+def policy(fn: Callable):
+    token = _POLICY.set(fn)
+    try:
+        yield
+    finally:
+        _POLICY.reset(token)
+
+
+def make_mesh_policy(mesh, batch_axes=None) -> Callable:
+    """'b' -> (pod, data) when divisible; 'h' -> model when divisible;
+    everything else unconstrained. ``batch_axes`` overrides the batch
+    mapping (e.g. pure-DP EBFT shards batch over data AND model)."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.distributed import sharding as SH
+
+    baxes = tuple(batch_axes) if batch_axes else SH.batch_axes(mesh)
+    bsize = 1
+    for a in baxes:
+        bsize *= SH.mesh_axis_size(mesh, a)
+    msize = SH.mesh_axis_size(mesh, SH.MODEL_AXIS)
+
+    # if the batch mapping already consumes the model axis (pure-DP),
+    # heads must stay unsharded
+    model_free = SH.MODEL_AXIS not in baxes
+
+    def pol(x, dims: str):
+        spec = []
+        for i, c in enumerate(dims[: x.ndim]):
+            if c == "b" and x.shape[i] % bsize == 0 and x.shape[i] >= bsize:
+                spec.append(baxes if len(baxes) > 1 else baxes[0])
+            elif (c == "h" and model_free and x.shape[i] % msize == 0
+                  and x.shape[i] >= msize):
+                spec.append(SH.MODEL_AXIS)
+            else:
+                spec.append(None)
+        spec += [None] * (x.ndim - len(spec))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*spec))
+        )
+
+    return pol

@@ -1,0 +1,115 @@
+"""Zero-padded attention-head expansion (exact-semantics TP enabler).
+
+A 40-head model cannot head-shard on a 16-wide model axis; the baseline
+fallback (replicate attention) costs every model shard the FULL attention
+pipeline (measured 16x its fair share of compute and HBM traffic on
+qwen2.5-32b). Padding q heads to the next multiple restores head TP and
+is EXACTLY the same function:
+
+  * a padded q head has zero wq rows -> q = 0 -> uniform softmax over its
+    kv group -> some context vector c,
+  * but its wo rows are zero -> contribution wo_pad @ c = 0.
+
+For GQA the pad is inserted PER KV GROUP (the q->kv mapping of real heads
+must not shift), so weights are reshaped (d, KV, G, hd) and the G axis is
+padded. For MHA, q and kv pad together (padded kv heads only serve padded
+q heads). ``head_pad_mask`` marks the padded slots so training can freeze
+them (their gradient is NOT zero — the uniform-softmax context flows into
+wo_pad's grad — so the mask must be applied each update).
+
+``launch/steps.py:padded_heads`` computes the padded counts; this module
+transforms real weight pytrees (tests pin forward-exactness at tiny
+scale).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sparsity.sparse_params import _path_names
+
+Params = Any
+
+_Q_LEAVES = {"wq": -2, "bq": -2, "wo": -3}   # head-axis index from the end
+_KV_LEAVES = {"wk": -2, "bk": -2, "wv": -2, "bv": -2}
+
+
+def _pad_axis(leaf: jax.Array, axis: int, new: int) -> jax.Array:
+    axis = axis % leaf.ndim
+    pad = [(0, 0)] * leaf.ndim
+    pad[axis] = (0, new - leaf.shape[axis])
+    return jnp.pad(leaf, pad)
+
+
+def _pad_grouped(leaf: jax.Array, axis: int, kv: int, g_old: int, g_new: int) -> jax.Array:
+    """(... H=kv*g_old ...) -> (... kv*g_new ...) padding inside each group."""
+    axis = axis % leaf.ndim
+    shape = leaf.shape
+    grouped = leaf.reshape(*shape[:axis], kv, g_old, *shape[axis + 1:])
+    pad = [(0, 0)] * grouped.ndim
+    pad[axis + 1] = (0, g_new - g_old)
+    grouped = jnp.pad(grouped, pad)
+    return grouped.reshape(*shape[:axis], kv * g_new, *shape[axis + 1:])
+
+
+def pad_attention_params(
+    params: Params, cfg_old: ModelConfig, cfg_new: ModelConfig
+) -> Params:
+    """Expand every attention leaf from (H, KV) to the padded (H', KV')."""
+    h0, kv0 = cfg_old.num_heads, cfg_old.num_kv_heads
+    h1, kv1 = cfg_new.num_heads, cfg_new.num_kv_heads
+    if (h0, kv0) == (h1, kv1):
+        return params
+    mha = kv0 == h0
+
+    def g(path, leaf):
+        name = _path_names(path)[-1]
+        if name in _Q_LEAVES and leaf.shape[_Q_LEAVES[name] % leaf.ndim] == h0:
+            ax = _Q_LEAVES[name]
+            if mha:
+                return _pad_axis(leaf, ax, h1)
+            return _pad_grouped(leaf, ax, kv0, h0 // kv0, h1 // kv1)
+        if mha and name in _KV_LEAVES and leaf.shape[_KV_LEAVES[name] % leaf.ndim] == kv0:
+            return _pad_axis(leaf, _KV_LEAVES[name], kv1)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(g, params)
+
+
+def head_pad_mask(
+    params_padded: Params, cfg_old: ModelConfig, cfg_new: ModelConfig
+) -> Params:
+    """1.0 on real slots, 0.0 on padded head slots (multiply into grads or
+    updates each step to keep the pads frozen at zero)."""
+    h0, kv0 = cfg_old.num_heads, cfg_old.num_kv_heads
+    h1, kv1 = cfg_new.num_heads, cfg_new.num_kv_heads
+    mha = kv0 == h0
+
+    def mask_for(leaf, ax, n_old_groups, group_old, group_new, kv):
+        ax = ax % leaf.ndim
+        m = jnp.ones(leaf.shape, jnp.float32)
+        if mha:
+            idx = [slice(None)] * leaf.ndim
+            idx[ax] = slice(h0, None)
+            return m.at[tuple(idx)].set(0.0)
+        shape = leaf.shape
+        gm = m.reshape(*shape[:ax], kv, group_new, *shape[ax + 1:])
+        idx = [slice(None)] * gm.ndim
+        idx[ax + 1] = slice(group_old, None)
+        gm = gm.at[tuple(idx)].set(0.0)
+        return gm.reshape(shape)
+
+    def g(path, leaf):
+        name = _path_names(path)[-1]
+        if name in _Q_LEAVES and leaf.shape[_Q_LEAVES[name] % leaf.ndim] == h1:
+            return mask_for(leaf, _Q_LEAVES[name], None,
+                            h0 // kv0, h1 // kv1, kv0)
+        if mha and name in _KV_LEAVES and leaf.shape[_KV_LEAVES[name] % leaf.ndim] == kv1:
+            return mask_for(leaf, _KV_LEAVES[name], None, h0 // kv0,
+                            h1 // kv1, kv0)
+        return jnp.ones((), jnp.float32)
+
+    return jax.tree_util.tree_map_with_path(g, params_padded)

@@ -1,0 +1,271 @@
+"""Logical-axis sharding rules -> NamedSharding (MaxText-style, best-effort).
+
+One function, ``param_pspecs``, maps every parameter leaf to a
+PartitionSpec by leaf name + shape, with divisibility checks against the
+actual mesh (rules that don't divide fall back down a preference list, and
+ultimately to replication — a 24-head Mamba on a 16-wide model axis simply
+replicates heads and shards the head_dim instead).
+
+Canonical tensor-parallel layout (one all-reduce per block, Megatron-style):
+  * q/k/v projections column-parallel over heads  -> P(..., "model", None)
+  * output projection  row-parallel over heads    -> P("model", None, ...)
+  * MLP up/gate column-parallel over ff, down row-parallel over ff
+  * MoE experts expert-parallel over E ("model" doubles as the EP axis)
+  * embeddings / LM head sharded over the (128-padded) vocab
+  * Mamba2 in/out projections split over heads (or head_dim as fallback)
+
+Data parallelism: the batch axis of activations / inputs is sharded over
+("pod", "data") when the mesh has a pod axis, else ("data",).
+
+ZeRO-1: optimizer moments take the param spec and additionally shard one
+still-unsharded axis over "data" when divisible (largest axis first) —
+params stay replicated across data, moments are partitioned.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sparsity.sparse_params import _path_names
+
+MODEL_AXIS = "model"
+DATA_AXIS = "data"
+POD_AXIS = "pod"
+
+
+def mesh_axis_size(mesh: Mesh, name: str) -> int:
+    # works for Mesh and AbstractMesh (rule tests use a 16x16 AbstractMesh
+    # without needing 256 devices)
+    return dict(mesh.shape).get(name, 1)
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return (POD_AXIS, DATA_AXIS) if POD_AXIS in mesh.axis_names else (DATA_AXIS,)
+
+
+def _fits(dim: int, size: int) -> bool:
+    return dim % size == 0 and dim >= size
+
+
+def _fits_padded(dim: int, size: int, max_waste: float = 1.0) -> bool:
+    """GSPMD supports unevenly sharded dims (it pads). Allow when the pad
+    waste (ceil(dim/size)*size/dim - 1) stays within ``max_waste`` — e.g.
+    20 heads over a 16-wide axis pad to 32 (waste 0.6), which beats both
+    replication (16x redundant attention compute) and head_dim sharding
+    (scores contract over hd -> a per-chunk all-reduce of the full scores
+    tensor, the pathology this rule exists to forbid)."""
+    if dim <= 1:
+        return False
+    slots = -(-dim // size) * size
+    return (slots - dim) / dim <= max_waste
+
+
+# ---------------------------------------------------------------------------
+# per-leaf rules: name -> list of (axis_index_from_end_of_logical_shape,
+# axis, mode) candidates, tried in order. Leading stack axes (L, G, K, E...)
+# are padded with None. ``mode``: "exact" requires divisibility; "pad"
+# additionally allows GSPMD uneven sharding within the waste bound.
+#
+# Attention shards ONLY over heads: q/k/v head_dim sharding is forbidden
+# (the scores einsum contracts hd, so hd sharding turns every attention
+# chunk into a cross-device partial-sum). KV heads stay exact-only —
+# under-divisible KV (GQA kv=8 on a 16-wide axis) replicates, which is the
+# standard Megatron GQA fallback and costs only the small kv projections.
+# Mamba B/C/dt/conv leaves replicate: they are O(d x N) small, and
+# sharding the state dim N makes the SSD contraction cross-device.
+# ---------------------------------------------------------------------------
+_LOGICAL_RULES = {
+    # name: (n_logical_dims, [(dim_idx, axis, mode), ...])
+    "wq": (3, [(1, MODEL_AXIS, "pad")]),       # (d, H, hd)
+    "wk": (3, [(1, MODEL_AXIS, "exact")]),     # (d, Hkv, hd)
+    "wv": (3, [(1, MODEL_AXIS, "exact")]),
+    "bq": (2, [(0, MODEL_AXIS, "pad")]),       # (H, hd)
+    "bk": (2, [(0, MODEL_AXIS, "exact")]),
+    "bv": (2, [(0, MODEL_AXIS, "exact")]),
+    "wo": (3, [(0, MODEL_AXIS, "pad")]),       # (H, hd, d)
+    "w_up": (2, [(1, MODEL_AXIS, "exact")]),   # (d, ff)
+    "w_gate": (2, [(1, MODEL_AXIS, "exact")]),
+    "w_down": (2, [(0, MODEL_AXIS, "exact")]), # (ff, d)
+    "in_z": (3, [(1, MODEL_AXIS, "exact")]),   # (d, H, P)
+    "in_x": (3, [(1, MODEL_AXIS, "exact")]),
+    "in_dt": (2, [(1, MODEL_AXIS, "exact")]),  # (d, H)
+    "out": (3, [(0, MODEL_AXIS, "exact")]),    # (H, P, d)
+    "gnorm_w": (1, [(0, MODEL_AXIS, "exact")]),# (H*P,) follows heads
+    "tok": (2, [(0, MODEL_AXIS, "exact")]),    # (V, d)
+    "head_w": (2, [(1, MODEL_AXIS, "exact")]), # (d, V)
+}
+# expert-batched leaves: shard E over model (EP) first; ff fallback
+_EXPERT_LEAF_DIMS = {"w_up": 3, "w_gate": 3, "w_down": 3}
+
+
+def _leaf_spec(names: Tuple[str, ...], shape: Tuple[int, ...], mesh: Mesh) -> P:
+    name = names[-1]
+    msize = mesh_axis_size(mesh, MODEL_AXIS)
+    ndim = len(shape)
+
+    key = name
+    if name == "w" and "head" in names:
+        key = "head_w"
+    if name == "w" and "gnorm" in names:
+        key = "gnorm_w"
+    if name == "w" and "router" in names:
+        return P(*([None] * ndim))  # routers replicate
+
+    # MoE expert tensors: (..., E, d, ff) — expert-parallel over E
+    if key in _EXPERT_LEAF_DIMS and "experts" in names:
+        e_idx = ndim - 3
+        if _fits(shape[e_idx], msize):
+            spec = [None] * ndim
+            spec[e_idx] = MODEL_AXIS
+            return P(*spec)
+        # fall through to ff sharding below
+
+    if key not in _LOGICAL_RULES:
+        return P(*([None] * ndim))
+
+    n_logical, candidates = _LOGICAL_RULES[key]
+    lead = ndim - n_logical  # stacked (L / G,K / E) axes
+    if lead < 0:
+        return P(*([None] * ndim))
+    for dim_idx, axis, mode in candidates:
+        d = lead + dim_idx
+        size = mesh_axis_size(mesh, axis)
+        # NOTE: pjit requires input dims divisible by their mesh axis, so
+        # "pad" mode cannot be expressed via shardings alone. Non-divisible
+        # head counts are handled by zero-padded head expansion at the
+        # parameter level (launch/steps.py pad_q_heads) which IS exact.
+        ok = _fits(shape[d], size)
+        if ok:
+            spec = [None] * ndim
+            spec[d] = axis
+            return P(*spec)
+    return P(*([None] * ndim))
+
+
+def param_pspecs(params_tree: Any, mesh: Mesh, fsdp: bool = False) -> Any:
+    """Pytree of PartitionSpec matching ``params_tree`` (arrays or
+    ShapeDtypeStructs).
+
+    ``fsdp=True`` additionally shards each leaf's largest still-free,
+    divisible axis over the batch axes (pod×data) — fully-sharded params
+    for the configs whose TP-sharded weights alone exceed per-chip HBM
+    (qwen1.5-110b, kimi-k2). XLA inserts the per-layer all-gathers
+    (scan-over-layers keeps them pipelined with compute).
+    """
+    baxes = batch_axes(mesh)
+    bsize = 1
+    for a in baxes:
+        bsize *= mesh_axis_size(mesh, a)
+
+    def g(path, leaf):
+        shape = tuple(leaf.shape)
+        spec = list(_leaf_spec(_path_names(path), shape, mesh))
+        if fsdp and len(shape) >= 2:
+            order = sorted(range(len(shape)), key=lambda i: -shape[i])
+            for i in order:
+                if spec[i] is None and _fits(shape[i], bsize):
+                    spec[i] = baxes if len(baxes) > 1 else baxes[0]
+                    break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(g, params_tree)
+
+
+def opt_pspecs(opt_shapes: Any, param_specs_by_path: Any, mesh: Mesh) -> Any:
+    """ZeRO-1 moment sharding: param spec + shard one free axis over "data".
+
+    ``opt_shapes`` is the eval_shape tree of the optimizer state; moment
+    leaves mirror param shapes. Leaves without a param analogue (step
+    counters) replicate.
+    """
+    dsize = mesh_axis_size(mesh, DATA_AXIS)
+
+    def g(path, leaf):
+        names = _path_names(path)
+        shape = tuple(leaf.shape)
+        if len(shape) == 0:
+            return P()
+        # moment leaves live under m/v/mu/<param path...>
+        base = _leaf_spec(tuple(n for n in names if n not in ("m", "v", "mu")), shape, mesh)
+        spec = list(base) + [None] * (len(shape) - len(base))
+        # ZeRO-1: add "data" on the largest unsharded, divisible axis
+        order = sorted(range(len(shape)), key=lambda i: -shape[i])
+        for i in order:
+            if spec[i] is None and _fits(shape[i], dsize):
+                spec[i] = DATA_AXIS
+                break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(g, opt_shapes)
+
+
+# ---------------------------------------------------------------------------
+# activations / inputs / serve state
+# ---------------------------------------------------------------------------
+def batch_pspecs(batch_tree: Any, mesh: Mesh) -> Any:
+    """Input batches: dim 0 = global batch over (pod, data); rest replicated.
+    Batch dims that don't divide fall back to replication (long_500k B=1)."""
+    baxes = batch_axes(mesh)
+    bsize = 1
+    for a in baxes:
+        bsize *= mesh_axis_size(mesh, a)
+
+    def g(leaf):
+        shape = tuple(leaf.shape)
+        if not shape:
+            return P()
+        if _fits(shape[0], bsize):
+            return P(baxes, *([None] * (len(shape) - 1)))
+        # try data-only (pod replicated)
+        if len(baxes) > 1 and _fits(shape[0], mesh_axis_size(mesh, DATA_AXIS)):
+            return P(DATA_AXIS, *([None] * (len(shape) - 1)))
+        return P(*([None] * len(shape)))
+
+    return jax.tree.map(g, batch_tree)
+
+
+def cache_pspecs(cache_tree: Any, mesh: Mesh) -> Any:
+    """Serve-state (KV cache / SSM state) sharding.
+
+    Leaves look like (L, B, S, Hkv, hd), (L, B, K, ch), (G, K, B, ...) etc.
+    Heuristic: shard the *batch* dim over data (first dim of size == serve
+    batch — detected as the first dim after any leading stack dims that
+    divides the data axis), and the heads/channel dim over model when
+    divisible. Scalars ("len") replicate.
+    """
+    dsize = mesh_axis_size(mesh, DATA_AXIS)
+    msize = mesh_axis_size(mesh, MODEL_AXIS)
+
+    def g(leaf):
+        shape = tuple(leaf.shape)
+        if len(shape) <= 1:
+            return P(*([None] * len(shape)))
+        spec: list = [None] * len(shape)
+        # batch dim: first dim (scanning from axis 0) divisible by data size,
+        # skipping obvious layer-stack leading axes by preferring axis 1+ for
+        # rank>=3 leaves.
+        start = 1 if len(shape) >= 3 else 0
+        for i in range(start, len(shape)):
+            if _fits(shape[i], dsize):
+                spec[i] = DATA_AXIS
+                break
+        # heads / channels dim: prefer dim -2 (heads / state), then -1
+        # (head_dim / channels). Never shard the sequence axis of a cache.
+        for i in (len(shape) - 2, len(shape) - 1):
+            if i >= 0 and spec[i] is None and _fits(shape[i], msize):
+                spec[i] = MODEL_AXIS
+                break
+        return P(*spec)
+
+    return jax.tree.map(g, cache_tree)
+
+
+def named(tree_of_specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_of_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,120 @@
+"""Blocked (flash) causal attention Pallas TPU kernel.
+
+The 32k-prefill hot spot: materializing (Sq, Sk) scores at 32k² is 4 GiB
+per head — far beyond VMEM. This kernel runs the online-softmax recurrence
+over (bq, bk) tiles: running max m, normalizer l, and the output
+accumulator live in VMEM scratch across the Sk sweep; HBM traffic is
+O(S·d) instead of O(S²).
+
+Causality is handled two ways:
+  * tiles entirely above the diagonal are *skipped* (no MXU work — the
+    grid still visits them, but `pl.when` guards all compute), halving
+    effective FLOPs for long sequences;
+  * the diagonal tile applies an iota-based mask.
+
+Layout: q (B·H, Sq, d), k/v (B·H, Sk, d) — callers fold batch and (GQA-
+repeated) heads into dim 0. Grid: (B·H, Sq/bq, Sk/bk), Sk minormost.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale: float, causal: bool, bq: int, bk: int, k_steps: int, q_offset: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # absolute positions of this tile's queries/keys
+    q_pos0 = q_offset + qi * bq       # queries start here in the kv timeline
+    k_pos0 = ki * bk
+
+    # skip tiles strictly above the causal diagonal
+    run = (not causal) or (q_pos0 + bq - 1 >= k_pos0)
+    is_diag = causal and (q_pos0 < k_pos0 + bk - 1)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0].astype(jnp.float32)          # (bk, d)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+        if causal:
+            # mask only needed on (partially) diagonal tiles
+            qp = q_pos0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kp = k_pos0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qp >= kp, s, _NEG)
+
+        m_prev = m_ref[...]                        # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)                     # (bq, bk)
+        corr = jnp.exp(m_prev - m_new)             # (bq, 1)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+            p.astype(v_ref.dtype), v_ref[0], preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == k_steps - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "bq", "bk", "q_offset", "interpret")
+)
+def flash_attention(
+    q: jax.Array,  # (BH, Sq, d)
+    k: jax.Array,  # (BH, Sk, d)
+    v: jax.Array,  # (BH, Sk, d)
+    *,
+    causal: bool = True,
+    bq: int = 128,
+    bk: int = 128,
+    q_offset: int = 0,
+    interpret: bool = False,
+) -> jax.Array:
+    BH, Sq, d = q.shape
+    _, Sk, _ = k.shape
+    bq, bk = min(bq, Sq), min(bk, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (q.shape, k.shape, bq, bk)
+    k_steps = Sk // bk
+    scale = 1.0 / math.sqrt(d)
+
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, scale=scale, causal=causal, bq=bq, bk=bk,
+            k_steps=k_steps, q_offset=q_offset,
+        ),
+        grid=(BH, Sq // bq, k_steps),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,39 @@
+"""jit'd public wrapper for flash attention.
+
+``flash_attention_bshd`` adapts the model-layer layout (B, S, H, hd) with
+GQA head-repetition folded in; used by models/layers.attend when
+impl="flash" on TPU. Off-TPU the portable chunked-jnp path in
+models/layers.py is the equivalent (same online-softmax recurrence).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention as _kernel
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, q_offset=0, interpret=False, **tiles):
+    if on_tpu() or interpret:
+        return _kernel(
+            q, k, v, causal=causal, q_offset=q_offset,
+            interpret=interpret or not on_tpu(), **tiles,
+        )
+    return flash_attention_ref(q, k, v, causal=causal, q_offset=q_offset)
+
+
+def flash_attention_bshd(q, k, v, *, causal=True, q_offset=0, interpret=False):
+    """q (B, Sq, H, hd); k/v (B, Sk, H, hd) already GQA-repeated."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    fold = lambda x, S: x.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    o = flash_attention(
+        fold(q, Sq), fold(k, Sk), fold(v, Sk),
+        causal=causal, q_offset=q_offset, interpret=interpret,
+    )
+    return o.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)

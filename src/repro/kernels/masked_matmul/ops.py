@@ -1,0 +1,19 @@
+"""jit'd public wrapper: dispatches to the Pallas kernel on TPU, to the
+interpreted kernel under ``interpret=True`` (CPU validation), and to the
+jnp oracle otherwise."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.masked_matmul.masked_matmul import masked_matmul as _kernel
+from repro.kernels.masked_matmul.ref import masked_matmul_ref
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def masked_matmul(x, w, m, interpret: bool = False, **tiles):
+    if on_tpu() or interpret:
+        return _kernel(x, w, m, interpret=interpret or not on_tpu(), **tiles)
+    return masked_matmul_ref(x, w, m)

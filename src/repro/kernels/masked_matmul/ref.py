@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the masked matmul kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_matmul_ref(x: jax.Array, w: jax.Array, m: jax.Array) -> jax.Array:
+    """out = x @ (w ⊙ m), accumulated in f32, cast back to x.dtype."""
+    wm = (w * m.astype(w.dtype)).astype(w.dtype)
+    return jnp.dot(
+        x, wm, preferred_element_type=jnp.float32
+    ).astype(x.dtype)

@@ -1,0 +1,93 @@
+"""N:M sparse matmul Pallas TPU kernel: out = x @ decompress(vals, idx).
+
+TPU has no sparse tensor cores, so the honest N:M win on TPU is **HBM
+bandwidth and footprint** (DESIGN.md §3): a 2:4 weight stores N/M = ½ the
+values plus int8 group offsets (2-bit packable), i.e. ~0.56× the bytes of
+the dense bf16 weight. This kernel streams the *compressed* representation
+HBM→VMEM, decompresses each (bk, bn) weight tile in VMEM with a
+compare-and-accumulate (no scatter — TPU-vector friendly), and feeds the
+dense tile straight to the MXU.
+
+Layout (produced by sparsity/sparse_params.nm_compress):
+    vals (K//m·n, N)   kept values, group-major along K
+    idx  (K//m·n, N)   int8 offset of each kept value inside its M-group
+
+Grid: (M/bm, N/bn, K/bk) with the f32 accumulator in VMEM scratch across
+the K sweep. The compressed K-tile has bk//m·n rows — contiguous, since
+groups follow K order.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, v_ref, i_ref, o_ref, acc_ref, *, n: int, m: int, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    vals = v_ref[...]                      # (G*n, bn)
+    idx = i_ref[...].astype(jnp.int32)     # (G*n, bn)
+    G = vals.shape[0] // n
+    bn = vals.shape[1]
+
+    # VMEM decompress: dense[g, o, c] = Σ_s vals[g, s, c] · [idx[g, s, c] == o]
+    vals_g = vals.reshape(G, n, bn)
+    idx_g = idx.reshape(G, n, bn)
+    dense = jnp.zeros((G, m, bn), vals.dtype)
+    for s in range(n):  # n is tiny (1..4): unrolled compare-accumulate
+        onehot = (
+            idx_g[:, s, None, :] == jax.lax.broadcasted_iota(jnp.int32, (G, m, bn), 1)
+        )
+        dense = dense + jnp.where(onehot, vals_g[:, s, None, :], 0)
+    w_tile = dense.reshape(G * m, bn)      # (bk, bn)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_tile, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "m", "bm", "bk", "bn", "interpret")
+)
+def nm_spmm(
+    x: jax.Array,     # (M, K)
+    vals: jax.Array,  # (K//m*n, N)
+    idx: jax.Array,   # (K//m*n, N) int8
+    *,
+    n: int,
+    m: int,
+    bm: int = 128,
+    bk: int = 128,
+    bn: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    M, K = x.shape
+    KC, N = vals.shape
+    assert KC * m == K * n, (x.shape, vals.shape, (n, m))
+    bm, bk, bn = min(bm, M), min(bk, K), min(bn, N)
+    assert bk % m == 0, f"bk={bk} must align with M-groups of {m}"
+    assert M % bm == 0 and K % bk == 0 and N % bn == 0
+    k_steps = K // bk
+    bkc = bk // m * n  # compressed rows per K tile
+
+    return pl.pallas_call(
+        functools.partial(_kernel, n=n, m=m, k_steps=k_steps),
+        grid=(M // bm, N // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bkc, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bkc, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, vals, idx.astype(jnp.int8))

@@ -1,0 +1,19 @@
+"""jit'd public wrapper for nm_spmm (TPU kernel / interpret / jnp oracle)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.nm_spmm.nm_spmm import nm_spmm as _kernel
+from repro.kernels.nm_spmm.ref import nm_spmm_ref
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def nm_spmm(x, vals, idx, *, n, m, interpret: bool = False, **tiles):
+    if on_tpu() or interpret:
+        return _kernel(
+            x, vals, idx, n=n, m=m, interpret=interpret or not on_tpu(), **tiles
+        )
+    return nm_spmm_ref(x, vals, idx, n=n, m=m)

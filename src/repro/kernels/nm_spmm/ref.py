@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the N:M sparse matmul kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sparsity.sparse_params import nm_decompress
+
+
+def nm_spmm_ref(x: jax.Array, vals: jax.Array, idx: jax.Array, *, n: int, m: int) -> jax.Array:
+    w = nm_decompress(vals, idx, n, m)  # (K, N) dense with zeros
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)

@@ -1,0 +1,382 @@
+"""Static analyzer for post-optimization (SPMD-partitioned) HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` visits every instruction
+ONCE — a ``lax.scan`` over 40 layers contributes its body cost a single
+time, so FLOPs/bytes/collective counts of scanned models are understated
+by the trip count (verified: scan(10 x matmul) reports the FLOPs of 1).
+This analyzer re-derives execution-weighted totals from
+``compiled.as_text()``:
+
+  1. split the module into computations and index every instruction's
+     output shape by name (operands in optimized HLO carry no shapes),
+  2. recover each while loop's trip count — preferentially from the
+     ``known_trip_count`` backend_config XLA attaches, falling back to
+     the compare-with-constant pattern in the condition computation —
+     and propagate multipliers through the call graph (nested scans
+     multiply, multiple call sites sum),
+  3. per instruction, weighted by its computation's multiplier:
+       * dot / convolution FLOPs from shapes (2 x prod(out) x contracted),
+       * collective "wire bytes" with ring-algorithm factors and the
+         replica-group size parsed per op,
+       * an HBM-traffic proxy: fusion-boundary operand+output bytes
+         (inside a fusion everything stays in registers/VMEM; what
+         crosses the boundary is what hits memory).
+
+All sizes are PER-DEVICE (the partitioned module is the per-device
+program). The roofline layer (launch/rooflines.py) divides by per-chip
+peak numbers directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "s8": 1, "u2": 1, "u4": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of a possibly-tuple shape string like
+    '(bf16[4,128]{1,0}, f32[8])' or 'f32[16,16]{1,0}'."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _prod(xs) -> int:
+    out = 1
+    for x in xs:
+        out *= x
+    return out
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    out_shape: str  # raw shape text (may be a tuple)
+    op: str
+    operands: List[str]  # operand instruction names
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction]
+    shapes: Dict[str, str]  # instr name -> output shape text
+
+
+# instruction: [ROOT] %name = <shape> opcode(...operands...), attrs
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"((?:\([^=]*?\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s*"
+    r"([\w\-]+)\((.*)$"
+)
+_HDR_NAME = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)")
+_OPERAND_NAME = re.compile(r"%([\w.\-]+)")
+
+
+_BLOCK_COMMENT = re.compile(r"/\*.*?\*/")
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        line = _BLOCK_COMMENT.sub("", line)
+        stripped = line.strip()
+        if stripped.endswith("{") and "->" in stripped and "=" not in stripped.split("->")[0]:
+            m = _HDR_NAME.match(stripped)
+            if m:
+                cur = Computation(m.group(1), [], {})
+                comps[cur.name] = cur
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            name, shape, op, rest = m.groups()
+            # operand names: %refs before the closing paren of the arg list
+            arg_text = rest.split("), ")[0] if "), " in rest else rest.rstrip(")")
+            operands = _OPERAND_NAME.findall(arg_text)
+            ins = Instruction(name, shape, op, operands, line)
+            cur.instructions.append(ins)
+            cur.shapes[name] = shape
+    return comps
+
+
+# ---------------------------------------------------------------------------
+# trip counts & multipliers
+# ---------------------------------------------------------------------------
+_KNOWN_TRIP = re.compile(r'"known_trip_count":\s*\{\s*"n"\s*:\s*"?(\d+)"?')
+_CALLED = re.compile(r"(?:to_apply|calls)=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_BODY = re.compile(r"body=%?([\w.\-]+)")
+_CONST_VAL = re.compile(r"constant\((\d+)\)")
+
+
+def _trip_from_condition(cond: Computation) -> int:
+    """Fallback: find compare-with-constant in the condition (possibly
+    inside a wrapped fusion whose operand is a local constant)."""
+    consts: Dict[str, int] = {}
+    for ins in cond.instructions:
+        if ins.op == "constant":
+            m = _CONST_VAL.search(ins.line)
+            if m:
+                consts[ins.name] = int(m.group(1))
+    best = 0
+    for ins in cond.instructions:
+        if ins.op in ("compare", "fusion"):
+            for o in ins.operands:
+                if o in consts:
+                    best = max(best, consts[o])
+    return best or 1
+
+
+def computation_multipliers(comps: Dict[str, Computation]) -> Dict[str, float]:
+    """entry=1; while cond/body multiply by trip count; calls inherit;
+    multiple call sites sum."""
+    edges: Dict[str, List[Tuple[str, float]]] = {c: [] for c in comps}
+    for cname, comp in comps.items():
+        for ins in comp.instructions:
+            if ins.op == "while":
+                trip = 0
+                m = _KNOWN_TRIP.search(ins.line)
+                if m:
+                    trip = int(m.group(1))
+                cond_m = _COND.search(ins.line)
+                body_m = _BODY.search(ins.line)
+                if not trip and cond_m and cond_m.group(1) in comps:
+                    trip = _trip_from_condition(comps[cond_m.group(1)])
+                trip = max(trip, 1)
+                for m2 in (cond_m, body_m):
+                    if m2 and m2.group(1) in comps:
+                        edges[cname].append((m2.group(1), float(trip)))
+            else:
+                for m2 in _CALLED.finditer(ins.line):
+                    if m2.group(1) in comps:
+                        edges[cname].append((m2.group(1), 1.0))
+
+    called = {callee for outs in edges.values() for callee, _ in outs}
+    roots = [c for c in comps if c not in called] or [next(iter(comps))]
+
+    mult: Dict[str, float] = {c: 0.0 for c in comps}
+    for r in roots:
+        mult[r] = 1.0
+    for _ in range(len(comps) + 1):
+        nxt = {c: 0.0 for c in comps}
+        for r in roots:
+            nxt[r] = 1.0
+        for caller, outs in edges.items():
+            if mult[caller] <= 0:
+                continue
+            for callee, w in outs:
+                nxt[callee] += mult[caller] * w
+        if nxt == mult:
+            break
+        mult = nxt
+    return mult
+
+
+# ---------------------------------------------------------------------------
+# per-op metrics
+# ---------------------------------------------------------------------------
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_GROUPS_V1 = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_V2 = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _dims(shape_text: str) -> List[int]:
+    m = _SHAPE_RE.search(shape_text)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+def dot_flops(ins: Instruction, shapes: Dict[str, str]) -> float:
+    """2 x prod(out) x prod(contracted lhs dims)."""
+    out_dims = _dims(ins.out_shape)
+    if not ins.operands:
+        return 0.0
+    lhs_shape = shapes.get(ins.operands[0], "")
+    lhs = _dims(lhs_shape)
+    cm = _CONTRACT_RE.search(ins.line)
+    contracted = 1
+    if cm and cm.group(1):
+        for d in cm.group(1).split(","):
+            di = int(d)
+            contracted *= lhs[di] if di < len(lhs) else 1
+    return 2.0 * _prod(out_dims) * contracted
+
+
+def conv_flops(ins: Instruction, shapes: Dict[str, str]) -> float:
+    """2 x prod(out) x (kernel spatial x in_channels)."""
+    out_dims = _dims(ins.out_shape)
+    if len(ins.operands) < 2:
+        return 0.0
+    ker = _dims(shapes.get(ins.operands[1], ""))
+    if not ker:
+        return 0.0
+    k_inner = _prod(ker) / max(ker[-1], 1)  # all but out-feature dim
+    return 2.0 * _prod(out_dims) * k_inner
+
+
+def group_size(ins: Instruction, total_devices: int) -> int:
+    m = _GROUPS_V1.search(ins.line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_V2.search(ins.line)
+    if m:
+        return int(m.group(2))
+    return total_devices
+
+
+def collective_wire_bytes(
+    ins: Instruction, kind: str, n: int, shapes: Dict[str, str]
+) -> Tuple[int, int]:
+    """(raw payload bytes, ring-algorithm wire-bytes estimate) per device."""
+    out_b = shape_bytes(ins.out_shape)
+    in_b = sum(shape_bytes(shapes.get(o, "")) for o in ins.operands)
+    if n <= 1:
+        return out_b, 0
+    f = (n - 1) / n
+    if kind == "all-reduce":
+        return out_b, int(2 * f * out_b)
+    if kind == "all-gather":
+        return out_b, int(f * out_b)  # each device receives (n-1)/n of out
+    if kind == "reduce-scatter":
+        return in_b, int(f * in_b)
+    if kind == "all-to-all":
+        return out_b, int(f * out_b)
+    if kind == "collective-permute":
+        return out_b, out_b
+    return out_b, out_b
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class HLOStats:
+    dot_flops: float = 0.0
+    conv_flops: float = 0.0
+    hbm_bytes: float = 0.0            # fusion-boundary traffic proxy
+    collective_payload: float = 0.0   # raw payload bytes
+    collective_wire: float = 0.0      # ring-estimate wire bytes
+    by_collective: Dict[str, float] = dataclasses.field(default_factory=dict)
+    by_group_size: Dict[int, float] = dataclasses.field(default_factory=dict)
+    collective_count: float = 0.0
+
+    @property
+    def flops(self) -> float:
+        return self.dot_flops + self.conv_flops
+
+    def asdict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["flops"] = self.flops
+        d["by_group_size"] = {str(k): v for k, v in self.by_group_size.items()}
+        return d
+
+
+# ops whose operand/output traffic crosses a fusion boundary (≈ HBM)
+_MEM_OPS = {
+    "fusion", "dot", "convolution", "copy", "gather", "scatter",
+    "dynamic-update-slice", "dynamic-slice", "sort", "reduce",
+    "concatenate", "transpose", "custom-call", "select-and-scatter",
+    "cholesky", "triangular-solve", "rng", "reduce-window",
+}
+
+
+def analyze(
+    text: str,
+    total_devices: int,
+    vmem_score_shapes: Optional[set] = None,
+) -> HLOStats:
+    """``vmem_score_shapes``: set of (q_chunk, kv_chunk) pairs. When given,
+    ops whose output's trailing two dims match a pair (the online-softmax
+    score pipeline) are treated as VMEM-resident — the memory model of the
+    flash-attention Pallas kernel (kernels/flash_attention), which fuses
+    scores -> softmax -> PV inside one kernel so those tensors never touch
+    HBM on the TPU target. The portable chunked-jnp lowering that the CPU
+    dry-run compiles materializes them at fusion boundaries, which
+    OVERSTATES the TPU memory term; this flag reports the kernel-true
+    number. q/k/v/o traffic is still counted (their producing/consuming
+    projection ops are unaffected)."""
+    comps = parse_module(text)
+    mult = computation_multipliers(comps)
+    st = HLOStats()
+
+    def is_vmem_resident(shape_text: str) -> bool:
+        if not vmem_score_shapes:
+            return False
+        dims = _dims(shape_text)
+        return len(dims) >= 3 and (dims[-2], dims[-1]) in vmem_score_shapes
+    # computations called as fusion bodies contribute no memory traffic of
+    # their own (they run in-registers); identify them.
+    fusion_bodies = set()
+    for comp in comps.values():
+        for ins in comp.instructions:
+            if ins.op == "fusion":
+                m = _CALLED.search(ins.line)
+                if m:
+                    fusion_bodies.add(m.group(1))
+    for cname, comp in comps.items():
+        w = mult.get(cname, 0.0)
+        if w <= 0:
+            continue
+        in_fusion = cname in fusion_bodies
+        for ins in comp.instructions:
+            op = ins.op
+            base = None
+            for c in _COLLECTIVES:
+                if op == c or op == c + "-start":
+                    base = c
+                    break
+            if base is not None:
+                n = group_size(ins, total_devices)
+                payload, wire = collective_wire_bytes(ins, base, n, comp.shapes)
+                st.collective_payload += w * payload
+                st.collective_wire += w * wire
+                st.by_collective[base] = st.by_collective.get(base, 0.0) + w * wire
+                st.by_group_size[n] = st.by_group_size.get(n, 0.0) + w * wire
+                st.collective_count += w
+                continue
+            if op == "dot":
+                st.dot_flops += w * dot_flops(ins, comp.shapes)
+            elif op == "convolution":
+                st.conv_flops += w * conv_flops(ins, comp.shapes)
+            if not in_fusion and op in _MEM_OPS:
+                if is_vmem_resident(ins.out_shape):
+                    continue
+                st.hbm_bytes += w * (
+                    shape_bytes(ins.out_shape)
+                    + sum(
+                        shape_bytes(comp.shapes.get(o, ""))
+                        for o in ins.operands
+                        if not is_vmem_resident(comp.shapes.get(o, ""))
+                    )
+                )
+    return st

@@ -1,0 +1,75 @@
+"""Batched serving driver: prefill + decode with continuous batching.
+
+    python -m repro.launch.serve --arch tiny_dense --requests 12 \
+        --batch 4 --prompt-len 32 --max-new 16 [--sparse 0.5]
+
+``--sparse`` prunes the (randomly initialised or checkpointed) model with
+Wanda and serves the sparse weights — demonstrating that EBFT-fine-tuned
+sparse params drop into the serving path unchanged (same pytree).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import ckpt as CK
+from repro.configs import get_config
+from repro.core.masks import prune
+from repro.data.tokens import CorpusConfig, SyntheticCorpus, calibration_set
+from repro.models.model import build
+from repro.serving.decode import Request, Server
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tiny_dense")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--sparse", type=float, default=0.0)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    if args.ckpt_dir:
+        latest = CK.latest_step(args.ckpt_dir)
+        if latest is not None:
+            params = CK.restore(args.ckpt_dir, {"params": params})["params"]
+            print(f"loaded checkpoint step {latest}")
+
+    corpus = SyntheticCorpus(CorpusConfig(vocab_size=cfg.vocab_size, seed=args.seed))
+    if args.sparse > 0:
+        calib = calibration_set(corpus, 16, args.prompt_len)
+        _, params = prune(model, params, calib, method="wanda", sparsity=args.sparse)
+        print(f"serving wanda-pruned weights at sparsity {args.sparse}")
+
+    rng = np.random.default_rng(args.seed)
+    reqs = [
+        Request(uid=i, prompt=corpus.sample(rng, args.prompt_len),
+                max_new=args.max_new)
+        for i in range(args.requests)
+    ]
+    server = Server(model, params, batch_size=args.batch,
+                    max_len=args.max_len, temperature=args.temperature)
+    t0 = time.time()
+    results = server.serve(reqs)
+    dt = time.time() - t0
+    toks = sum(len(v) for v in results.values())
+    print(f"served {len(results)} requests, {toks} tokens in {dt:.1f}s "
+          f"({toks / max(dt, 1e-9):.1f} tok/s, continuous batching over "
+          f"{args.batch} slots)")
+    for uid in sorted(results)[:3]:
+        print(f"  req {uid}: {results[uid][:8]}...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,468 @@
+"""Sharded step builders shared by dryrun / train / serve.
+
+For each (arch config x shape cell x mesh) this module constructs the
+jit-able step function plus the in/out shardings and the abstract
+(ShapeDtypeStruct) inputs needed to ``.lower().compile()`` it without
+allocating anything — the multi-pod dry-run contract.
+
+Three step kinds, matching the assignment's shape semantics:
+
+  * train    — loss + grad (microbatched lax.scan) + optimizer update.
+  * prefill  — one full-prompt forward filling the KV cache (inference).
+  * decode   — ONE new token against a seq_len-deep KV cache.
+
+Production numerics: bf16 params/activations, f32 optimizer moments
+(ZeRO-1-sharded over "data"), block remat for train, chunked attention
+(the portable analogue of the flash-attention Pallas kernel) for the
+32k/500k cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import act_sharding as AS
+from repro.distributed import fsdp as FSDP
+from repro.distributed import sharding as SH
+from repro.models.model import Model, build
+from repro.optim.optimizers import adamw
+from repro.training.train_loop import make_train_step
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# production adaptation of an assigned config to a shape cell
+# ---------------------------------------------------------------------------
+# Archs whose TP-sharded bf16 params + f32 grads + ZeRO-1 moments exceed one
+# v5e chip's HBM: shard params over (pod, data) too (FSDP, with the ZeRO-3
+# gather-at-use policy from distributed/fsdp.py); scan-over-layers pipelines
+# the per-layer all-gathers with compute.
+#
+# Threshold calibration (perf iteration q32b-1): 32B TP-16 fits —
+# params 65GB/16 = 4.1GB + grads f32 8.1GB + ZeRO-1 moments 1GB ≈ 13GB
+# < 16GB HBM, so FSDP (and its gather traffic) is pure overhead below
+# ~60B params.
+_FSDP_PARAM_THRESHOLD = 60e9  # params
+
+
+def padded_heads(cfg: ModelConfig, model_axis: int) -> Tuple[int, int]:
+    """Zero-padded head expansion: the smallest (H', KV') >= (H, KV) that
+    restores head-parallel attention on a ``model_axis``-wide mesh.
+
+    Semantics-preserving: padded q heads get zero wq/wo rows, so the
+    model function is EXACTLY the 40-head model (a tiny-scale allclose
+    test pins this; padded-head grads are masked in the update). For GQA
+    the pad goes inside each kv group so the q->kv mapping of real heads
+    is unchanged; for MHA both H and KV pad together.
+
+    Measured motivation (baseline dry-run): non-divisible heads fall back
+    to replicated attention -> the (H, q, k) score pipeline runs FULL-
+    width on every model shard (16x the compute and HBM traffic of its
+    fair share on qwen2.5-32b / qwen1.5-4b).
+    """
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    if h % model_axis == 0 or h == 0:
+        return h, kv
+    if h == kv:  # MHA: pad both together
+        h2 = -(-h // model_axis) * model_axis
+        if h2 / h <= 1.7:
+            return h2, h2
+        return h, kv
+    group = h // kv
+    g2 = group
+    while (kv * g2) % model_axis and g2 < 4 * group:
+        g2 += 1
+    if (kv * g2) % model_axis == 0 and (g2 / group) <= 1.7:
+        return kv * g2, kv
+    return h, kv
+
+
+def adapt_config(
+    cfg: ModelConfig, shape: ShapeConfig, mesh: Optional[Mesh] = None
+) -> ModelConfig:
+    """The production numerics/attention policy for a shape cell."""
+    kw: Dict[str, Any] = dict(dtype="bfloat16", param_dtype="bfloat16")
+    if shape.kind == "train":
+        kw["remat"] = "block"
+        # 4k train: chunked attention keeps the per-microbatch score
+        # buffer at (H, q_chunk, chunk) instead of (H, S, S).
+        kw["attn_impl"] = "chunked"
+        kw["attn_chunk"] = 1024
+        kw["attn_q_chunk"] = 1024
+    else:
+        kw["attn_impl"] = "chunked"
+        kw["attn_chunk"] = 2048
+        kw["attn_q_chunk"] = 2048 if shape.seq_len > 8192 else 0
+    # head padding pays where the attention score pipeline is hot (train /
+    # prefill / ebft). Decode is memory-bound on KV-cache reads: MHA padding
+    # (20->32 kv heads) grows the cache 1.6x for zero compute benefit
+    # (measured: qwen4b decode memory term 1.85 -> 2.93 s) — skip it there.
+    if (mesh is not None and cfg.family not in ("ssm",)
+            and shape.kind != "decode"):
+        msize = SH.mesh_axis_size(mesh, SH.MODEL_AXIS)
+        h2, kv2 = padded_heads(cfg, msize)
+        if (h2, kv2) != (cfg.num_heads, cfg.num_kv_heads):
+            kw["num_heads"] = h2
+            kw["num_kv_heads"] = kv2
+            kw["head_dim"] = cfg.resolved_head_dim  # keep hd fixed under pad
+    if mesh is not None and cfg.moe_num_experts:
+        # per-shard MoE dispatch: G = batch shards makes the (G, E, C, d)
+        # dispatch buffer shard (data, EP, ., .) with LOCAL capacity — with
+        # G=1 the routing one-hot/cumsum is O(total tokens x E) PER DEVICE
+        # (411 GiB/dev on kimi prefill_32k; the measured pathology).
+        gshards = 1
+        for a in SH.batch_axes(mesh):
+            gshards *= SH.mesh_axis_size(mesh, a)
+        kw["moe_dispatch_groups"] = gshards
+    return cfg.replace(**kw)
+
+
+def microbatches_for(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> int:
+    """Grad-accumulation depth: keep ~1 sample per data-shard per microbatch
+    for the 4k cells (bounds live activations; remat bounds within-block)."""
+    if shape.kind != "train":
+        return 1
+    dp = 1
+    for a in SH.batch_axes(mesh):
+        dp *= SH.mesh_axis_size(mesh, a)
+    per_shard = max(1, shape.global_batch // max(dp, 1))
+    return per_shard  # microbatch = 1 sample / shard
+
+
+def wants_fsdp(cfg: ModelConfig) -> bool:
+    return cfg.param_count() > _FSDP_PARAM_THRESHOLD
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class SteppedCell:
+    """Everything needed to lower/compile one dry-run cell."""
+
+    kind: str  # train | prefill | decode
+    fn: Callable  # the pure step function
+    in_shardings: Tuple
+    out_shardings: Any
+    abstract_args: Tuple  # ShapeDtypeStructs matching fn's positional args
+    donate_argnums: Tuple[int, ...]
+    model: Model
+    cfg: ModelConfig
+
+
+def _named(tree, mesh):
+    return SH.named(tree, mesh)
+
+
+def _abstractify(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+    )
+
+
+# ---------------------------------------------------------------------------
+def build_train_cell(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh: Mesh,
+    *,
+    lr: float = 1e-4,
+    fsdp: Optional[bool] = None,
+    microbatches: Optional[int] = None,
+) -> SteppedCell:
+    cfg = adapt_config(cfg, shape, mesh)
+    model = build(cfg)
+    fsdp = wants_fsdp(cfg) if fsdp is None else fsdp
+    mb = microbatches_for(cfg, shape, mesh) if microbatches is None else microbatches
+
+    params_shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    pspecs = SH.param_pspecs(params_shapes, mesh, fsdp=fsdp)
+    opt = adamw(lr)
+    opt_shapes = jax.eval_shape(opt.init, params_shapes)
+    ospecs = SH.opt_pspecs(opt_shapes, pspecs, mesh)
+
+    batch_shapes = model.input_specs(shape)
+    bspecs = SH.batch_pspecs(batch_shapes, mesh)
+
+    # pin batch sharding to dim 1 after the (microbatches, local, ...)
+    # reshape — otherwise GSPMD may shard the microbatch dim and every
+    # device redundantly computes the whole microbatch (see train_loop).
+    mb_shardings = jax.tree.map(
+        lambda spec: NamedSharding(mesh, P(None, *spec)),
+        bspecs, is_leaf=lambda x: isinstance(x, P),
+    )
+
+    def constrain(mb_tree):
+        return jax.lax.with_sharding_constraint(mb_tree, mb_shardings)
+
+    inner = make_train_step(
+        model.loss, opt, microbatches=mb,
+        constrain_microbatch=constrain if mb > 1 else None,
+    )
+
+    act_pol = AS.make_mesh_policy(mesh)
+    if fsdp:
+        # ZeRO-3 gather-at-use: re-constrain each scanned block's params to
+        # TP-only inside the loop body, forcing GSPMD to all-gather WEIGHTS
+        # (params_bytes x 3 per step) instead of partial-summing
+        # activation-sized products across the data axis (measured 2000x
+        # worse on qwen2.5-32b; see EXPERIMENTS.md §Perf).
+        gather = FSDP.make_tp_regather(mesh)
+
+        def train_step(params, opt_state, batch):
+            with FSDP.gather_policy(gather), AS.policy(act_pol):
+                p, o, metrics, _ = inner(params, opt_state, batch, None)
+            return p, o, metrics
+    else:
+        def train_step(params, opt_state, batch):
+            with AS.policy(act_pol):
+                p, o, metrics, _ = inner(params, opt_state, batch, None)
+            return p, o, metrics
+
+    in_sh = (_named(pspecs, mesh), _named(ospecs, mesh), _named(bspecs, mesh))
+    out_sh = (in_sh[0], in_sh[1], None)
+    return SteppedCell(
+        kind="train",
+        fn=train_step,
+        in_shardings=in_sh,
+        out_shardings=out_sh,
+        abstract_args=(params_shapes, opt_shapes, batch_shapes),
+        donate_argnums=(0, 1),
+        model=model,
+        cfg=cfg,
+    )
+
+
+# ---------------------------------------------------------------------------
+def _serve_fully_sharded(cfg: ModelConfig, mesh: Mesh) -> bool:
+    """Inference params sharded over (pod, data) too, gathered per block:
+    TP-only leaves kimi-K2 at 126 GiB/dev (2.06 TB bf16 / 16); fully
+    sharded it is 8 GB/dev + one layer's gather in flight."""
+    msize = SH.mesh_axis_size(mesh, SH.MODEL_AXIS)
+    return cfg.param_count() * 2 / msize > 10e9  # bf16 bytes per TP shard
+
+
+def build_prefill_cell(
+    cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh
+) -> SteppedCell:
+    cfg = adapt_config(cfg, shape, mesh)
+    model = build(cfg)
+
+    params_shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    serve_fsdp = _serve_fully_sharded(cfg, mesh)
+    pspecs = SH.param_pspecs(params_shapes, mesh, fsdp=serve_fsdp)
+
+    batch_shapes = model.input_specs(shape)
+    bspecs = SH.batch_pspecs(batch_shapes, mesh)
+
+    B = shape.global_batch
+    state_shapes = jax.eval_shape(
+        lambda: model.init_serve_state(B, shape.seq_len)
+    )
+    sspecs = SH.cache_pspecs(state_shapes, mesh)
+
+    act_pol = AS.make_mesh_policy(mesh)
+    gather = FSDP.make_tp_regather(mesh) if serve_fsdp else None
+
+    def prefill_step(params, batch, state):
+        if gather is not None:
+            with FSDP.gather_policy(gather), AS.policy(act_pol):
+                return model.prefill(params, batch, state)
+        with AS.policy(act_pol):
+            return model.prefill(params, batch, state)
+
+    in_sh = (_named(pspecs, mesh), _named(bspecs, mesh), _named(sspecs, mesh))
+    out_sh = (None, _named(sspecs, mesh))
+    return SteppedCell(
+        kind="prefill",
+        fn=prefill_step,
+        in_shardings=in_sh,
+        out_shardings=out_sh,
+        abstract_args=(params_shapes, batch_shapes, state_shapes),
+        donate_argnums=(2,),
+        model=model,
+        cfg=cfg,
+    )
+
+
+# ---------------------------------------------------------------------------
+def build_decode_cell(
+    cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh
+) -> SteppedCell:
+    """One decode step: new token (B, 1) against a KV cache / SSM state of
+    depth seq_len (the cache is allocated at seq_len + 1 so the write fits)."""
+    cfg = adapt_config(cfg, shape, mesh)
+    model = build(cfg)
+
+    params_shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    serve_fsdp = _serve_fully_sharded(cfg, mesh)
+    pspecs = SH.param_pspecs(params_shapes, mesh, fsdp=serve_fsdp)
+
+    B = shape.global_batch
+    state_shapes = jax.eval_shape(
+        lambda: model.init_serve_state(B, shape.seq_len + 1)
+    )
+    sspecs = SH.cache_pspecs(state_shapes, mesh)
+    tok_shape = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tok_spec = SH.batch_pspecs(tok_shape, mesh)
+
+    act_pol = AS.make_mesh_policy(mesh)
+    gather = FSDP.make_tp_regather(mesh) if serve_fsdp else None
+
+    def decode_step(params, token, state):
+        if gather is not None:
+            with FSDP.gather_policy(gather), AS.policy(act_pol):
+                return model.decode_step(params, token, state)
+        with AS.policy(act_pol):
+            return model.decode_step(params, token, state)
+
+    in_sh = (_named(pspecs, mesh), _named(tok_spec, mesh), _named(sspecs, mesh))
+    out_sh = (None, _named(sspecs, mesh))
+    return SteppedCell(
+        kind="decode",
+        fn=decode_step,
+        in_shardings=in_sh,
+        out_shardings=out_sh,
+        abstract_args=(params_shapes, tok_shape, state_shapes),
+        donate_argnums=(2,),
+        model=model,
+        cfg=cfg,
+    )
+
+
+# ---------------------------------------------------------------------------
+# the paper's own workload: one Adam step of block-wise reconstruction
+# fine-tuning (Alg. 1 inner loop) on the production mesh. D_c per the
+# paper: 256 x 1024-token segments; here one full-D_c batch per step,
+# sharded over (pod, data); the block's weights/masks/moments are
+# TP-sharded exactly like the training cells.
+EBFT_SHAPE = ShapeConfig("ebft_block", 1024, 256, "ebft")
+
+
+def build_ebft_cell(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh: Mesh,
+    *,
+    block_index: Optional[int] = None,
+    lr: float = 2e-4,  # the paper's EBFT learning rate
+    dp_only: bool = False,
+) -> SteppedCell:
+    """``dp_only``: exploit the paper's block-locality — one block's
+    weights (+f32 moments) fit a single chip for every assigned arch, so
+    replicating them and going pure-DP trades the per-layer row-parallel
+    activation all-reduces (4 x (B/16, S, d) f32 per step under TP) for
+    ONE block-sized gradient all-reduce. Beyond-paper optimization; the
+    TP layout is the paper-faithful baseline (same sharding as training).
+    """
+    from repro.core import reconstruction as R
+    from repro.optim.optimizers import adam, apply_updates
+
+    cfg = adapt_config(cfg, shape, mesh).replace(remat="none")
+    model = build(cfg)
+    if block_index is None:
+        # mid-stack block; for enc-dec use an encoder block (decoder blocks
+        # additionally need the cross-attention memory stream)
+        i = (cfg.enc_layers // 2) if cfg.family == "encdec" else model.num_blocks // 2
+    else:
+        i = block_index
+
+    bw_shapes = jax.eval_shape(
+        lambda: model.get_block(model.init(jax.random.PRNGKey(0)), i)
+    )
+    block_params = sum(
+        int(jnp.prod(jnp.array(x.shape))) for x in jax.tree.leaves(bw_shapes)
+    )
+    # pure DP only pays when the whole block (+f32 moments) is chip-sized;
+    # MoE expert blocks (kimi: 16.9B params) must stay EP/TP-sharded.
+    if dp_only and block_params > 500e6:
+        dp_only = False
+    if dp_only:
+        bspecs = jax.tree.map(lambda x: P(*([None] * x.ndim)), bw_shapes)
+    else:
+        bspecs = SH.param_pspecs(bw_shapes, mesh)
+    mask_shapes = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.dtype(cfg.param_dtype)),
+        bw_shapes,
+    )
+    opt = adam(lr)
+    opt_shapes = jax.eval_shape(opt.init, bw_shapes)
+    ospecs = SH.opt_pspecs(opt_shapes, bspecs, mesh)
+    # ZeRO-2-style gradient sharding: same layout as the moments, so the
+    # cross-data grad combine lowers to a reduce-scatter (half the wire of
+    # the replicated all-reduce) and the optimizer update runs sharded.
+    gspecs = SH.opt_pspecs(bw_shapes, bspecs, mesh)
+
+    B, S = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    h_shape = jax.ShapeDtypeStruct((B, S, d), jnp.dtype(cfg.dtype))
+    pos_shape = jax.ShapeDtypeStruct((1, S), jnp.int32)
+    if dp_only:
+        # batch over EVERY mesh axis (weights are replicated)
+        all_axes = SH.batch_axes(mesh) + (SH.MODEL_AXIS,)
+        hspec = P(all_axes, None, None)
+        act_pol = AS.make_mesh_policy(mesh, batch_axes=all_axes)
+    else:
+        hspec = SH.batch_pspecs(h_shape, mesh)
+        act_pol = AS.make_mesh_policy(mesh)
+    pspec = P(*([None] * 2))
+
+    def ebft_step(bw, opt_state, mask_bp, h, target, pos):
+        with AS.policy(act_pol):
+            def loss_fn(bw_):
+                return R.block_loss(model, i, bw_, mask_bp, h, target, pos, {})
+
+            loss, g = jax.value_and_grad(loss_fn)(bw)
+            # ZeRO-2: combine grad partials straight into the moment
+            # sharding — a reduce-scatter (wire = 1x grad bytes) instead
+            # of a replicated all-reduce (2x); the Adam update then runs
+            # on the shards.
+            g = jax.lax.with_sharding_constraint(g, _named(gspecs, mesh))
+            upd, opt_state2 = opt.update(g, opt_state, bw)
+            # ZeRO-1 moments are data-sharded; the update all-gather back
+            # to the replicated/TP params is bf16-safe (params are bf16).
+            upd = jax.tree.map(lambda u: u.astype(jnp.bfloat16), upd)
+            return apply_updates(bw, upd), opt_state2, loss
+
+    in_sh = (
+        _named(bspecs, mesh), _named(ospecs, mesh), _named(bspecs, mesh),
+        _named(hspec, mesh), _named(hspec, mesh),
+        NamedSharding(mesh, pspec),
+    )
+    out_sh = (in_sh[0], in_sh[1], None)
+    return SteppedCell(
+        kind="ebft",
+        fn=ebft_step,
+        in_shardings=in_sh,
+        out_shardings=out_sh,
+        abstract_args=(bw_shapes, opt_shapes, mask_shapes, h_shape, h_shape, pos_shape),
+        donate_argnums=(0, 1),
+        model=model,
+        cfg=cfg,
+    )
+
+
+# ---------------------------------------------------------------------------
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, **kw) -> SteppedCell:
+    if shape.kind == "train":
+        return build_train_cell(cfg, shape, mesh, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_cell(cfg, shape, mesh)
+    if shape.kind == "ebft":
+        return build_ebft_cell(cfg, shape, mesh)
+    return build_decode_cell(cfg, shape, mesh)
+
+
+def lower_cell(cell: SteppedCell):
+    """jit + lower with abstract inputs (no allocation)."""
+    jitted = jax.jit(
+        cell.fn,
+        in_shardings=cell.in_shardings,
+        out_shardings=cell.out_shardings,
+        donate_argnums=cell.donate_argnums,
+    )
+    return jitted.lower(*cell.abstract_args)

@@ -1,0 +1,167 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a single *shared* attention block
+applied every ``hybrid_attn_every`` layers.
+
+The shared block has one set of weights but a distinct KV cache per
+invocation site (weights shared, activations not). We simplify Zamba2's
+per-invocation LoRA diversification away (noted in DESIGN.md §7): the shared
+block is applied verbatim at each site.
+
+Layer schedule for num_layers=38, every=6:
+    mamba x6, shared-attn, mamba x6, shared-attn, ... (6 invocations), mamba x2
+Implemented as a scan over G groups of (K mamba layers + shared block) plus a
+trailing scan for the remainder — HLO stays O(1) in depth.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import fsdp
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models import transformer as T
+
+Params = Dict[str, Any]
+
+
+def schedule(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """-> (groups G, mamba-per-group K, trailing mamba layers R)."""
+    K = cfg.hybrid_attn_every
+    G = cfg.num_layers // K
+    R = cfg.num_layers - G * K
+    return G, K, R
+
+
+def init(rng, cfg: ModelConfig) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ke, km, ks, kh = jax.random.split(rng, 4)
+    G, K, R = schedule(cfg)
+
+    mamba = [S.init_mamba_block(k, cfg, dtype) for k in jax.random.split(km, cfg.num_layers)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *mamba)
+    grouped = jax.tree.map(lambda a: a[: G * K].reshape((G, K) + a.shape[1:]), stacked)
+    trailing = jax.tree.map(lambda a: a[G * K :], stacked) if R else None
+
+    params: Params = {
+        "embed": {"tok": L.init_embedding(ke, cfg.padded_vocab, cfg.d_model, dtype)},
+        "groups": grouped,  # leading (G, K) axes
+        "shared": T.init_block(ks, cfg, dtype),  # one shared attention block
+        "final_norm": L.init_norm(cfg.d_model, cfg.norm, dtype),
+        "head": {
+            "w": (jax.random.normal(kh, (cfg.d_model, cfg.padded_vocab)) * 0.02).astype(dtype)
+        },
+    }
+    if trailing is not None:
+        params["trailing"] = trailing
+    return params
+
+
+# ---------------------------------------------------------------------------
+def _mamba_scan(cfg, h, stacked_bp, states=None):
+    """Scan K mamba layers. states: optional {"conv": (K,...), "ssm": (K,...)}"""
+    if states is None:
+        def body(h, bp):
+            bp = fsdp.gather_block(bp)
+            out, _ = S.mamba_block_apply(bp, cfg, h)
+            return out, None
+        h, _ = jax.lax.scan(body, h, stacked_bp)
+        return h, None
+
+    def body(h, xs):
+        bp, conv_s, ssm_s = xs
+        out, ns = S.mamba_block_apply(bp, cfg, h, state={"conv": conv_s, "ssm": ssm_s})
+        return out, (ns["conv"], ns["ssm"])
+
+    h, (convs, ssms) = jax.lax.scan(body, h, (stacked_bp, states["conv"], states["ssm"]))
+    return h, {"conv": convs, "ssm": ssms}
+
+
+def forward_hidden(params: Params, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    dtype = jnp.dtype(cfg.dtype)
+    h = L.embed(params["embed"]["tok"], tokens, dtype)
+    positions = jnp.arange(tokens.shape[1])[None, :]
+
+    def group_body(h, group_bp):
+        h, _ = _mamba_scan(cfg, h, group_bp)
+        h, _ = T.block_apply(params["shared"], cfg, h, positions)
+        return h, None
+
+    if cfg.remat == "block":
+        group_body = jax.checkpoint(group_body, prevent_cse=False)
+    h, _ = jax.lax.scan(group_body, h, params["groups"])
+    if "trailing" in params:
+        h, _ = _mamba_scan(cfg, h, params["trailing"])
+    return L.apply_norm(params["final_norm"], h, cfg.norm)
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    return L.lm_logits(params["head"]["w"], forward_hidden(params, cfg, tokens))
+
+
+# ---------------------------------------------------------------------------
+# serving: mamba states per layer + per-invocation KV caches for the shared blk
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> Params:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    G, K, R = schedule(cfg)
+    H, P, N, Kc = cfg.ssm_num_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_conv
+    ch = H * P + 2 * N
+    hd = cfg.resolved_head_dim
+    cache: Params = {
+        "groups": {
+            "conv": jnp.zeros((G, K, batch, Kc - 1, ch), dtype),
+            "ssm": jnp.zeros((G, K, batch, H, N, P), jnp.float32),
+        },
+        "shared_kv": {  # one KV cache per shared-block invocation
+            "k": jnp.zeros((G, batch, max_len, cfg.num_kv_heads, hd), dtype),
+            "v": jnp.zeros((G, batch, max_len, cfg.num_kv_heads, hd), dtype),
+        },
+        "len": jnp.zeros((), jnp.int32),
+    }
+    if R:
+        cache["trailing"] = {
+            "conv": jnp.zeros((R, batch, Kc - 1, ch), dtype),
+            "ssm": jnp.zeros((R, batch, H, N, P), jnp.float32),
+        }
+    return cache
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array, cache: Params):
+    dtype = jnp.dtype(cfg.dtype)
+    h = L.embed(params["embed"]["tok"], tokens, dtype)
+    positions = cache["len"] + jnp.arange(tokens.shape[1])[None, :]
+
+    def group_body(h, xs):
+        group_bp, conv_s, ssm_s, kc, vc = xs
+        h, ns = _mamba_scan(cfg, h, group_bp, states={"conv": conv_s, "ssm": ssm_s})
+        h, nkv = T.block_apply(
+            params["shared"], cfg, h, positions,
+            cache={"k": kc, "v": vc, "len": cache["len"]},
+        )
+        return h, (ns["conv"], ns["ssm"], nkv["k"], nkv["v"])
+
+    xs = (
+        params["groups"],
+        cache["groups"]["conv"],
+        cache["groups"]["ssm"],
+        cache["shared_kv"]["k"],
+        cache["shared_kv"]["v"],
+    )
+    h, (convs, ssms, ks, vs) = jax.lax.scan(group_body, h, xs)
+    new_cache: Params = {
+        "groups": {"conv": convs, "ssm": ssms},
+        "shared_kv": {"k": ks, "v": vs},
+        "len": cache["len"] + tokens.shape[1],
+    }
+    if "trailing" in params:
+        h, ns = _mamba_scan(cfg, h, params["trailing"], states=cache["trailing"])
+        new_cache["trailing"] = ns
+    h = L.apply_norm(params["final_norm"], h, cfg.norm)
+    return L.lm_logits(params["head"]["w"], h[:, -1:]), new_cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, token: jax.Array, cache: Params):
+    return prefill(params, cfg, token, cache)

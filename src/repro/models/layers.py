@@ -1,0 +1,335 @@
+"""Core neural-net layers, pure functional JAX.
+
+All params are plain dicts of jnp arrays. Block-stacked variants carry a
+leading layer axis and are consumed through ``jax.lax.scan``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import act_sharding as AS
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Normalisation
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(p: Params, x: jax.Array, kind: str) -> jax.Array:
+    if kind == "layernorm":
+        return layer_norm(x, p["w"], p["b"])
+    return rms_norm(x, p["w"])
+
+
+def init_norm(d: int, kind: str, dtype=jnp.float32) -> Params:
+    p = {"w": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["b"] = jnp.zeros((d,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_table(positions: jax.Array, head_dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """positions: (...,) int -> cos/sin of shape (..., head_dim/2), f32."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, hd); cos/sin: (B, S, hd/2) or (S, hd/2)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    if cos.ndim == 2:  # (S, half) -> broadcast over batch
+        cos = cos[None]
+        sin = sin[None]
+    cos = cos[:, :, None, :]  # (B, S, 1, half)
+    sin = sin[:, :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional QKV bias). Three entry points:
+#   - attend_full: training / prefill (causal or bidirectional)
+#   - attend_decode: single-step query against a KV cache
+# Both support "dot" (materialise scores) and "chunked" (online-softmax over
+# KV chunks; memory O(S_q * chunk)) implementations.
+# ---------------------------------------------------------------------------
+def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    """(B, S, Hkv, hd) -> (B, S, Hkv*groups, hd)."""
+    if groups == 1:
+        return k
+    b, s, hkv, hd = k.shape
+    k = jnp.broadcast_to(k[:, :, :, None, :], (b, s, hkv, groups, hd))
+    return k.reshape(b, s, hkv * groups, hd)
+
+
+def _softmax_attend(q, k, v, mask, scale):
+    """q: (B,Sq,H,hd) k/v: (B,Sk,H,hd) mask: (Sq,Sk) or (B,Sq,Sk) or None."""
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if mask is not None:
+        if mask.ndim == 2:
+            mask = mask[None, None]
+        else:
+            mask = mask[:, None]
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def _chunked_attend(q, k, v, causal: bool, q_offset, chunk: int, scale):
+    """Online-softmax over KV chunks: memory O(B*H*Sq*chunk), never (Sq,Sk).
+
+    q: (B,Sq,H,hd); k,v: (B,Sk,H,hd). q_offset: position of q[0] within k's
+    timeline (for causal masking during decode/prefill-with-cache).
+
+    The chunk body is ``jax.checkpoint``ed: without it the scan's VJP
+    stores the (B,H,Sq,chunk) probs for every chunk — O(Sq*Sk) residuals,
+    exactly what flash-attention backward exists to avoid. With it the
+    backward recomputes scores chunk-by-chunk (~+30% attention FLOPs for
+    an O(S^2) -> O(S*chunk) residual-memory drop).
+
+    Dots take bf16 inputs with f32 accumulation (MXU-native); the online
+    softmax statistics (m, l, acc) stay f32.
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    n_chunks = max(1, (sk + chunk - 1) // chunk)
+    pad = n_chunks * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, xs):
+        m, l, acc = carry  # (B,H,Sq), (B,H,Sq), (B,Sq,H,hd)
+        ci, kb, vb = xs
+        scores = jnp.einsum(
+            "bqhd,bkhd->bhqk", q, kb, preferred_element_type=jnp.float32
+        ) * scale
+        k_pos = ci * chunk + jnp.arange(chunk)
+        valid = k_pos < sk
+        msk = valid[None, :]
+        if causal:
+            msk = msk & (q_pos[:, None] >= k_pos[None, :])
+        scores = jnp.where(msk[None, None], scores, -1e30)
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        p = jnp.exp(scores - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr.transpose(0, 2, 1)[..., None] + jnp.einsum(
+            "bhqk,bkhd->bqhd", p.astype(q.dtype), vb,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l, acc), None
+
+    body = jax.checkpoint(body, prevent_cse=False)
+
+    # constrain the carry inits: without this GSPMD infers a replicated
+    # carry from the constant zeros/full and drags the whole loop into
+    # batch-replicated compute (see distributed/act_sharding.py)
+    m0 = AS.constrain(jnp.full((b, h, sq), -jnp.inf, jnp.float32), "bhq")
+    l0 = AS.constrain(jnp.zeros((b, h, sq), jnp.float32), "bhq")
+    a0 = AS.constrain(jnp.zeros((b, sq, h, hd), jnp.float32), "bqhd")
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (jnp.arange(n_chunks), kc, vc)
+    )
+    out = acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+    return out.astype(q.dtype)
+
+
+def attend(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    impl: str = "dot",
+    chunk: int = 1024,
+    q_chunk: int = 0,
+    q_offset=0,
+) -> jax.Array:
+    """Grouped-query attention core. q: (B,Sq,H,hd), k/v: (B,Sk,Hkv,hd).
+
+    ``q_chunk`` > 0 blocks the query axis too (32k-prefill memory: keeps
+    the online-softmax probs tensor at (B,H,q_chunk,chunk) instead of
+    (B,H,Sq,chunk)).
+    """
+    h, hkv = q.shape[2], k.shape[2]
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    k = _repeat_kv(k, h // hkv)
+    v = _repeat_kv(v, h // hkv)
+    if impl == "flash" and jax.default_backend() == "tpu":
+        from repro.kernels.flash_attention.ops import flash_attention_bshd
+
+        off = q_offset if isinstance(q_offset, int) else 0
+        return flash_attention_bshd(q, k, v, causal=causal, q_offset=off)
+    if impl == "chunked" or impl == "flash":
+        # portable equivalent of the Pallas flash kernel (same online-
+        # softmax recurrence), used off-TPU
+        sq = q.shape[1]
+        if q_chunk and sq > q_chunk:
+            assert sq % q_chunk == 0, (sq, q_chunk)
+            nq = sq // q_chunk
+            qb = q.reshape(q.shape[0], nq, q_chunk, *q.shape[2:]).transpose(
+                1, 0, 2, 3, 4
+            )
+            offs = q_offset + jnp.arange(nq) * q_chunk
+
+            def one(args):
+                qi, off = args
+                return _chunked_attend(qi, k, v, causal, off, chunk, scale)
+
+            out = jax.lax.map(one, (qb, offs))  # (nq, B, q_chunk, H, hd)
+            return out.transpose(1, 0, 2, 3, 4).reshape(q.shape)
+        return _chunked_attend(q, k, v, causal, q_offset, chunk, scale)
+    sq, sk = q.shape[1], k.shape[1]
+    mask = None
+    if causal:
+        q_pos = q_offset + jnp.arange(sq)
+        mask = q_pos[:, None] >= jnp.arange(sk)[None, :]
+    return _softmax_attend(q, k, v, mask, scale)
+
+
+# ---------------------------------------------------------------------------
+# Attention block params + apply
+# ---------------------------------------------------------------------------
+def init_attention(key, d: int, h: int, hkv: int, hd: int, bias: bool, dtype) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "wq": (jax.random.normal(k1, (d, h, hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(k2, (d, hkv, hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(k3, (d, hkv, hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(k4, (h, hd, d)) * (1.0 / math.sqrt(h * hd))).astype(dtype),
+    }
+    if bias:
+        p["bq"] = jnp.zeros((h, hd), dtype)
+        p["bk"] = jnp.zeros((hkv, hd), dtype)
+        p["bv"] = jnp.zeros((hkv, hd), dtype)
+    return p
+
+
+def qkv_proj(p: Params, x: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return q, k, v
+
+
+def out_proj(p: Params, o: jax.Array) -> jax.Array:
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def attention_block(
+    p: Params,
+    x: jax.Array,
+    *,
+    positions: jax.Array,
+    rope_theta: float,
+    causal: bool = True,
+    impl: str = "dot",
+    chunk: int = 1024,
+    q_chunk: int = 0,
+    cache: Optional[Params] = None,
+) -> Tuple[jax.Array, Optional[Params]]:
+    """Full attention sub-block (no norm/residual). If ``cache`` is given it is
+    a dict {"k": (B,Smax,Hkv,hd), "v": ..., "len": ()} — decode/prefill append.
+    """
+    hd = p["wq"].shape[-1]
+    q, k, v = qkv_proj(p, x)
+    cos, sin = rope_table(positions, hd, rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    if cache is None:
+        o = attend(q, k, v, causal=causal, impl=impl, chunk=chunk, q_chunk=q_chunk)
+        return out_proj(p, o), None
+
+    # append to cache at position cache["len"]
+    start = cache["len"]
+    kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, start, 0, 0))
+    vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, start, 0, 0))
+    new_cache = {"k": kc, "v": vc, "len": start + x.shape[1]}
+    o = attend(
+        q, kc.astype(q.dtype), vc.astype(q.dtype),
+        causal=True, impl="chunked" if impl != "dot" else "dot",
+        chunk=chunk, q_chunk=q_chunk, q_offset=start,
+    )
+    return out_proj(p, o), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+def init_mlp(key, d: int, ff: int, act: str, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(ff)
+    p = {
+        "w_up": (jax.random.normal(ks[0], (d, ff)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(ks[1], (ff, d)) * s_out).astype(dtype),
+    }
+    if act == "swiglu":
+        p["w_gate"] = (jax.random.normal(ks[2], (d, ff)) * s_in).astype(dtype)
+    return p
+
+
+def mlp_block(p: Params, x: jax.Array, act: str) -> jax.Array:
+    up = x @ p["w_up"]
+    if act == "swiglu":
+        gate = x @ p["w_gate"]
+        hidden = jax.nn.silu(gate) * up
+    elif act == "sq_relu":
+        hidden = jnp.square(jax.nn.relu(up))
+    else:  # gelu
+        hidden = jax.nn.gelu(up)
+    return hidden @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+def init_embedding(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+def embed(tok_emb: jax.Array, tokens: jax.Array, dtype) -> jax.Array:
+    return tok_emb[tokens].astype(dtype)
+
+
+def lm_logits(head_w: jax.Array, x: jax.Array) -> jax.Array:
+    return jnp.einsum("bsd,dv->bsv", x, head_w).astype(jnp.float32)

@@ -1,0 +1,472 @@
+"""Uniform model API over all families.
+
+``build(cfg)`` returns a ``Model`` facade with a consistent interface:
+
+    m.init(rng)                          -> params
+    m.loss(params, batch)                -> (scalar loss, metrics dict)
+    m.forward(params, batch)             -> logits
+    m.init_serve_state(batch, max_len)   -> state   (KV cache / SSM states)
+    m.prefill(params, batch, state)      -> (logits, state)
+    m.decode_step(params, token, state)  -> (logits, state)
+    m.input_specs(shape_cfg)             -> {name: ShapeDtypeStruct}
+
+plus the block-level API consumed by EBFT (core/ebft.py):
+
+    m.num_blocks                          (int; shared blocks counted once)
+    m.get_block(params, i) / m.set_block(params, i, bp)
+    m.apply_block(params, i, bp, h, positions) -> h'
+    m.embed_tokens(params, batch) -> h0   (input hidden stream)
+    m.finalize(params, h) -> logits       (final norm + head)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, hybrid, layers, moe, ssm, transformer, vlm
+
+Params = Dict[str, Any]
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, mask: Optional[jax.Array] = None):
+    """logits (B,S,V) f32, labels (B,S) int32. Returns mean nll over mask."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def _shift_loss(logits: jax.Array, tokens: jax.Array):
+    """Next-token loss: predict tokens[:, 1:] from logits[:, :-1]."""
+    return cross_entropy(logits[:, :-1], tokens[:, 1:])
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable  # (params, batch) -> logits
+    loss: Callable  # (params, batch) -> (loss, metrics)
+    init_serve_state: Callable  # (batch, max_len) -> state
+    prefill: Callable  # (params, batch, state) -> (logits, state)
+    decode_step: Callable  # (params, token, state) -> (logits, state)
+    input_specs: Callable  # (ShapeConfig) -> dict
+    num_blocks: int
+    get_block: Callable
+    set_block: Callable
+    apply_block: Callable
+    embed_tokens: Callable
+    finalize: Callable
+
+
+# ---------------------------------------------------------------------------
+# helpers for stacked-leaf block slicing
+# ---------------------------------------------------------------------------
+def _slice_tree(tree, i):
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+def _set_tree(tree, i, sub):
+    return jax.tree.map(lambda a, s: a.at[i].set(s.astype(a.dtype)), tree, sub)
+
+
+# ---------------------------------------------------------------------------
+def _token_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    B, S = shape.global_batch, shape.seq_len
+    return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+
+def build(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense",):
+        return _build_dense(cfg)
+    if fam == "vlm":
+        return _build_vlm(cfg)
+    if fam == "moe":
+        return _build_moe(cfg)
+    if fam == "ssm":
+        return _build_ssm(cfg)
+    if fam == "hybrid":
+        return _build_hybrid(cfg)
+    if fam == "encdec":
+        return _build_encdec(cfg)
+    raise ValueError(f"unknown family {fam}")
+
+
+# ---------------------------------------------------------------------------
+def _build_dense(cfg: ModelConfig) -> Model:
+    M = transformer
+
+    def forward(params, batch):
+        return M.forward(params, cfg, batch["tokens"])
+
+    def loss(params, batch):
+        logits = forward(params, batch)
+        l = _shift_loss(logits, batch["tokens"])
+        return l, {"nll": l}
+
+    def prefill(params, batch, state):
+        return M.prefill(params, cfg, batch["tokens"], state)
+
+    def embed_tokens(params, batch):
+        h = layers.embed(params["embed"]["tok"], batch["tokens"], jnp.dtype(cfg.dtype))
+        pos = jnp.arange(batch["tokens"].shape[1])[None, :]
+        return h, pos
+
+    def apply_block(params, i, bp, h, positions):
+        out, _ = M.block_apply(bp, cfg, h, positions)
+        return out
+
+    def finalize(params, h):
+        h = layers.apply_norm(params["final_norm"], h, cfg.norm)
+        return M.logits_from_hidden(params, cfg, h)
+
+    return Model(
+        cfg=cfg,
+        init=lambda rng: M.init(rng, cfg),
+        forward=forward,
+        loss=loss,
+        init_serve_state=lambda b, ml: M.init_cache(cfg, b, ml),
+        prefill=prefill,
+        decode_step=lambda p, t, s: M.decode_step(p, cfg, t, s),
+        input_specs=lambda shape: _token_specs(cfg, shape),
+        num_blocks=cfg.num_layers,
+        get_block=lambda params, i: _slice_tree(params["blocks"], i),
+        set_block=lambda params, i, bp: {
+            **params, "blocks": _set_tree(params["blocks"], i, bp)
+        },
+        apply_block=apply_block,
+        embed_tokens=embed_tokens,
+        finalize=finalize,
+    )
+
+
+# ---------------------------------------------------------------------------
+def _build_vlm(cfg: ModelConfig) -> Model:
+    M = vlm
+
+    def forward(params, batch):
+        return M.forward(params, cfg, batch["tokens"], batch["patches"])
+
+    def loss(params, batch):
+        logits = forward(params, batch)
+        l = _shift_loss(logits, batch["tokens"])
+        return l, {"nll": l}
+
+    def input_specs(shape: ShapeConfig):
+        B, S = shape.global_batch, shape.seq_len
+        P = min(cfg.frontend_len, S // 2)
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, S - P), jnp.int32),
+            "patches": jax.ShapeDtypeStruct((B, P, cfg.d_model), jnp.dtype(cfg.dtype)),
+        }
+
+    def embed_tokens(params, batch):
+        dt = jnp.dtype(cfg.dtype)
+        tok = layers.embed(params["embed"]["tok"], batch["tokens"], dt)
+        h = jnp.concatenate([batch["patches"].astype(dt), tok], axis=1)
+        pos = jnp.arange(h.shape[1])[None, :]
+        return h, pos
+
+    def apply_block(params, i, bp, h, positions):
+        out, _ = transformer.block_apply(bp, cfg, h, positions)
+        return out
+
+    def finalize(params, h):
+        h = layers.apply_norm(params["final_norm"], h, cfg.norm)
+        return transformer.logits_from_hidden(params, cfg, h)
+
+    def prefill(params, batch, state):
+        return M.prefill_multimodal(params, cfg, batch["tokens"], batch["patches"], state)
+
+    return Model(
+        cfg=cfg,
+        init=lambda rng: M.init(rng, cfg),
+        forward=forward,
+        loss=loss,
+        init_serve_state=lambda b, ml: transformer.init_cache(cfg, b, ml),
+        prefill=prefill,
+        decode_step=lambda p, t, s: transformer.decode_step(p, cfg, t, s),
+        input_specs=input_specs,
+        num_blocks=cfg.num_layers,
+        get_block=lambda params, i: _slice_tree(params["blocks"], i),
+        set_block=lambda params, i, bp: {
+            **params, "blocks": _set_tree(params["blocks"], i, bp)
+        },
+        apply_block=apply_block,
+        embed_tokens=embed_tokens,
+        finalize=finalize,
+    )
+
+
+# ---------------------------------------------------------------------------
+def _build_moe(cfg: ModelConfig) -> Model:
+    M = moe
+    n_dense = cfg.moe_first_dense
+
+    def forward(params, batch):
+        return M.forward(params, cfg, batch["tokens"])
+
+    def loss(params, batch):
+        h, aux = M.forward_hidden(params, cfg, batch["tokens"])
+        logits = transformer.logits_from_hidden(params, cfg, h)
+        nll = _shift_loss(logits, batch["tokens"])
+        l = nll + 0.01 * aux
+        return l, {"nll": nll, "aux": aux}
+
+    def embed_tokens(params, batch):
+        h = layers.embed(params["embed"]["tok"], batch["tokens"], jnp.dtype(cfg.dtype))
+        pos = jnp.arange(batch["tokens"].shape[1])[None, :]
+        return h, pos
+
+    def get_block(params, i):
+        if i < n_dense:
+            return _slice_tree(params["dense_blocks"], i)
+        return _slice_tree(params["moe_blocks"], i - n_dense)
+
+    def set_block(params, i, bp):
+        if i < n_dense:
+            return {**params, "dense_blocks": _set_tree(params["dense_blocks"], i, bp)}
+        return {**params, "moe_blocks": _set_tree(params["moe_blocks"], i - n_dense, bp)}
+
+    def apply_block(params, i, bp, h, positions):
+        if i < n_dense:
+            out, _ = transformer.block_apply(bp, cfg, h, positions)
+            return out
+        out, _, _ = M.moe_block_apply(bp, cfg, h, positions)
+        return out
+
+    def finalize(params, h):
+        h = layers.apply_norm(params["final_norm"], h, cfg.norm)
+        return transformer.logits_from_hidden(params, cfg, h)
+
+    def prefill(params, batch, state):
+        return M.prefill(params, cfg, batch["tokens"], state)
+
+    return Model(
+        cfg=cfg,
+        init=lambda rng: M.init(rng, cfg),
+        forward=forward,
+        loss=loss,
+        init_serve_state=lambda b, ml: M.init_cache(cfg, b, ml),
+        prefill=prefill,
+        decode_step=lambda p, t, s: M.decode_step(p, cfg, t, s),
+        input_specs=lambda shape: _token_specs(cfg, shape),
+        num_blocks=cfg.num_layers,
+        get_block=get_block,
+        set_block=set_block,
+        apply_block=apply_block,
+        embed_tokens=embed_tokens,
+        finalize=finalize,
+    )
+
+
+# ---------------------------------------------------------------------------
+def _build_ssm(cfg: ModelConfig) -> Model:
+    M = ssm
+
+    def forward(params, batch):
+        return M.forward(params, cfg, batch["tokens"])
+
+    def loss(params, batch):
+        logits = forward(params, batch)
+        l = _shift_loss(logits, batch["tokens"])
+        return l, {"nll": l}
+
+    def embed_tokens(params, batch):
+        h = layers.embed(params["embed"]["tok"], batch["tokens"], jnp.dtype(cfg.dtype))
+        pos = jnp.arange(batch["tokens"].shape[1])[None, :]
+        return h, pos
+
+    def apply_block(params, i, bp, h, positions):
+        out, _ = M.mamba_block_apply(bp, cfg, h)
+        return out
+
+    def finalize(params, h):
+        h = layers.apply_norm(params["final_norm"], h, cfg.norm)
+        return layers.lm_logits(params["head"]["w"], h)
+
+    def prefill(params, batch, state):
+        return M.prefill(params, cfg, batch["tokens"], state)
+
+    return Model(
+        cfg=cfg,
+        init=lambda rng: M.init(rng, cfg),
+        forward=forward,
+        loss=loss,
+        init_serve_state=lambda b, ml: M.init_cache(cfg, b, ml),
+        prefill=prefill,
+        decode_step=lambda p, t, s: M.decode_step(p, cfg, t, s),
+        input_specs=lambda shape: _token_specs(cfg, shape),
+        num_blocks=cfg.num_layers,
+        get_block=lambda params, i: _slice_tree(params["blocks"], i),
+        set_block=lambda params, i, bp: {
+            **params, "blocks": _set_tree(params["blocks"], i, bp)
+        },
+        apply_block=apply_block,
+        embed_tokens=embed_tokens,
+        finalize=finalize,
+    )
+
+
+# ---------------------------------------------------------------------------
+def _build_hybrid(cfg: ModelConfig) -> Model:
+    M = hybrid
+    G, K, R = M.schedule(cfg)
+    n_mamba = cfg.num_layers
+    # EBFT block index space: [0, n_mamba) mamba blocks, n_mamba = shared block
+    num_blocks = n_mamba + 1
+
+    def forward(params, batch):
+        return M.forward(params, cfg, batch["tokens"])
+
+    def loss(params, batch):
+        logits = forward(params, batch)
+        l = _shift_loss(logits, batch["tokens"])
+        return l, {"nll": l}
+
+    def embed_tokens(params, batch):
+        h = layers.embed(params["embed"]["tok"], batch["tokens"], jnp.dtype(cfg.dtype))
+        pos = jnp.arange(batch["tokens"].shape[1])[None, :]
+        return h, pos
+
+    def get_block(params, i):
+        if i == n_mamba:
+            return params["shared"]
+        if i < G * K:
+            return jax.tree.map(lambda a: a[i // K, i % K], params["groups"])
+        return _slice_tree(params["trailing"], i - G * K)
+
+    def set_block(params, i, bp):
+        if i == n_mamba:
+            return {**params, "shared": bp}
+        if i < G * K:
+            return {
+                **params,
+                "groups": jax.tree.map(
+                    lambda a, s: a.at[i // K, i % K].set(s.astype(a.dtype)), params["groups"], bp
+                ),
+            }
+        return {**params, "trailing": _set_tree(params["trailing"], i - G * K, bp)}
+
+    def apply_block(params, i, bp, h, positions):
+        if i == n_mamba:
+            out, _ = transformer.block_apply(bp, cfg, h, positions)
+            return out
+        out, _ = ssm.mamba_block_apply(bp, cfg, h)
+        return out
+
+    def finalize(params, h):
+        h = layers.apply_norm(params["final_norm"], h, cfg.norm)
+        return layers.lm_logits(params["head"]["w"], h)
+
+    def prefill(params, batch, state):
+        return M.prefill(params, cfg, batch["tokens"], state)
+
+    return Model(
+        cfg=cfg,
+        init=lambda rng: M.init(rng, cfg),
+        forward=forward,
+        loss=loss,
+        init_serve_state=lambda b, ml: M.init_cache(cfg, b, ml),
+        prefill=prefill,
+        decode_step=lambda p, t, s: M.decode_step(p, cfg, t, s),
+        input_specs=lambda shape: _token_specs(cfg, shape),
+        num_blocks=num_blocks,
+        get_block=get_block,
+        set_block=set_block,
+        apply_block=apply_block,
+        embed_tokens=embed_tokens,
+        finalize=finalize,
+    )
+
+
+# ---------------------------------------------------------------------------
+def _build_encdec(cfg: ModelConfig) -> Model:
+    M = encdec
+    n_enc, n_dec = cfg.enc_layers, cfg.num_layers
+
+    def forward(params, batch):
+        return M.forward(params, cfg, batch["tokens"], batch["frames"])
+
+    def loss(params, batch):
+        logits = forward(params, batch)
+        l = _shift_loss(logits, batch["tokens"])
+        return l, {"nll": l}
+
+    def input_specs(shape: ShapeConfig):
+        B, S = shape.global_batch, shape.seq_len
+        F = max(cfg.frontend_len, S // 8)
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "frames": jax.ShapeDtypeStruct((B, F, cfg.d_model), jnp.dtype(cfg.dtype)),
+        }
+
+    # serve state bundles the decoder KV cache with the encoder memory
+    def init_serve_state(b, ml):
+        F = max(cfg.frontend_len, ml // 8)
+        return {
+            "cache": M.init_cache(cfg, b, ml),
+            "memory": jnp.zeros((b, F, cfg.d_model), jnp.dtype(cfg.dtype)),
+        }
+
+    def prefill(params, batch, state):
+        memory = M.encode(params, cfg, batch["frames"])
+        logits, cache = M.prefill(params, cfg, batch["tokens"], state["cache"], memory)
+        return logits, {"cache": cache, "memory": memory}
+
+    def decode_step(params, token, state):
+        logits, cache = M.decode_step(params, cfg, token, state["cache"], state["memory"])
+        return logits, {"cache": cache, "memory": state["memory"]}
+
+    # EBFT block index space: encoder blocks [0, n_enc), decoder [n_enc, n_enc+n_dec)
+    def get_block(params, i):
+        if i < n_enc:
+            return _slice_tree(params["enc_blocks"], i)
+        return _slice_tree(params["dec_blocks"], i - n_enc)
+
+    def set_block(params, i, bp):
+        if i < n_enc:
+            return {**params, "enc_blocks": _set_tree(params["enc_blocks"], i, bp)}
+        return {**params, "dec_blocks": _set_tree(params["dec_blocks"], i - n_enc, bp)}
+
+    def embed_tokens(params, batch):
+        # EBFT fine-tunes the decoder stack; encoder memory comes along as aux.
+        h = layers.embed(params["embed"]["tok"], batch["tokens"], jnp.dtype(cfg.dtype))
+        pos = jnp.arange(batch["tokens"].shape[1])[None, :]
+        return h, pos
+
+    def apply_block(params, i, bp, h, positions, memory=None):
+        if i < n_enc:
+            return M.enc_block_apply(bp, cfg, h, positions)
+        out, _ = M.dec_block_apply(bp, cfg, h, memory, positions)
+        return out
+
+    def finalize(params, h):
+        h = layers.apply_norm(params["final_norm"], h, cfg.norm)
+        return layers.lm_logits(params["head"]["w"], h)
+
+    return Model(
+        cfg=cfg,
+        init=lambda rng: M.init(rng, cfg),
+        forward=forward,
+        loss=loss,
+        init_serve_state=init_serve_state,
+        prefill=prefill,
+        decode_step=decode_step,
+        input_specs=input_specs,
+        num_blocks=n_enc + n_dec,
+        get_block=get_block,
+        set_block=set_block,
+        apply_block=apply_block,
+        embed_tokens=embed_tokens,
+        finalize=finalize,
+    )

@@ -1,0 +1,267 @@
+"""Mixture-of-Experts transformer (DeepSeek-MoE-16B, Kimi-K2 families).
+
+Fine-grained MoE: ``moe_num_experts`` routed experts with top-k softmax
+gating (renormalised over the selected k), plus ``moe_num_shared`` shared
+experts that process every token. The first ``moe_first_dense`` layers are
+ordinary dense blocks (DeepSeek/Kimi convention).
+
+Dispatch is capacity-based scatter/gather (statically shaped, GSPMD
+shardable): tokens are scattered into an (E, C, d) buffer sharded over the
+"model" (expert-parallel) axis, expert FFNs run as batched einsums, results
+gather back weighted by the gates. Overflowed tokens fall through to the
+residual (standard capacity-drop semantics; capacity factor configurable).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import fsdp
+from repro.models import layers as L
+from repro.models import transformer as T
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_moe_mlp(key, cfg: ModelConfig, dtype) -> Params:
+    d, ff, E = cfg.d_model, cfg.moe_d_ff, cfg.moe_num_experts
+    ks = jax.random.split(key, 5)
+    s_in, s_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(ff)
+    p: Params = {
+        "router": {"w": (jax.random.normal(ks[0], (d, E)) * s_in).astype(jnp.float32)},
+        "experts": {
+            "w_gate": (jax.random.normal(ks[1], (E, d, ff)) * s_in).astype(dtype),
+            "w_up": (jax.random.normal(ks[2], (E, d, ff)) * s_in).astype(dtype),
+            "w_down": (jax.random.normal(ks[3], (E, ff, d)) * s_out).astype(dtype),
+        },
+    }
+    if cfg.moe_num_shared:
+        p["shared"] = L.init_mlp(ks[4], d, ff * cfg.moe_num_shared, "swiglu", dtype)
+    return p
+
+
+def init_moe_block(key, cfg: ModelConfig, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    return {
+        "ln1": L.init_norm(d, cfg.norm, dtype),
+        "ln2": L.init_norm(d, cfg.norm, dtype),
+        "attn": L.init_attention(k1, d, cfg.num_heads, cfg.num_kv_heads, hd, cfg.qkv_bias, dtype),
+        "moe": init_moe_mlp(k2, cfg, dtype),
+    }
+
+
+def init(rng, cfg: ModelConfig) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ke, kd, km, kh = jax.random.split(rng, 4)
+    n_dense, n_moe = cfg.moe_first_dense, cfg.num_layers - cfg.moe_first_dense
+    params: Params = {
+        "embed": {"tok": L.init_embedding(ke, cfg.padded_vocab, cfg.d_model, dtype)},
+        "moe_blocks": T._stack_blocks(
+            jax.random.split(km, n_moe), lambda k: init_moe_block(k, cfg, dtype)
+        ),
+        "final_norm": L.init_norm(cfg.d_model, cfg.norm, dtype),
+    }
+    if n_dense:
+        params["dense_blocks"] = T._stack_blocks(
+            jax.random.split(kd, n_dense), lambda k: T.init_block(k, cfg, dtype)
+        )
+    if not cfg.tie_embeddings:
+        params["head"] = {
+            "w": (jax.random.normal(kh, (cfg.d_model, cfg.padded_vocab)) * 0.02).astype(dtype)
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# routed expert dispatch
+# ---------------------------------------------------------------------------
+def route(router_w: jax.Array, xf: jax.Array, k: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """xf (T, d) -> (gates (T,k) f32, expert idx (T,k) i32, probs (T,E) f32)."""
+    logits = (xf.astype(jnp.float32) @ router_w).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, idx, probs
+
+
+def _dispatch_group(p: Params, xf: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Route/dispatch/combine for one token group. xf (T, d) -> (out, aux)."""
+    T_, d = xf.shape
+    E, k = cfg.moe_num_experts, cfg.moe_top_k
+
+    gates, idx, probs = route(p["router"]["w"], xf, k)
+
+    # load-balance auxiliary loss (Switch-style)
+    me = probs.mean(axis=0)  # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(1.0) / (T_ * k)
+    aux = E * jnp.sum(me * ce)
+
+    # capacity-based dispatch (per-group capacity)
+    C = max(1, int(cfg.moe_capacity_factor * T_ * k / E))
+    flat_idx = idx.reshape(-1)  # (T*k,)
+    onehot = jax.nn.one_hot(flat_idx, E, dtype=jnp.int32)  # (T*k, E)
+    pos = jnp.cumsum(onehot, axis=0) - 1  # position within expert
+    pos = jnp.take_along_axis(pos, flat_idx[:, None], axis=1)[:, 0]  # (T*k,)
+    keep = pos < C
+    pos = jnp.where(keep, pos, 0)
+
+    x_rep = jnp.repeat(xf, k, axis=0)  # (T*k, d)
+    disp = jnp.zeros((E, C, d), xf.dtype)
+    disp = disp.at[flat_idx, pos].add(
+        jnp.where(keep[:, None], x_rep, 0).astype(xf.dtype), mode="drop"
+    )
+
+    # expert FFN (swiglu), batched over E
+    ew = p["experts"]
+    gate_h = jnp.einsum("ecd,edf->ecf", disp, ew["w_gate"])
+    up_h = jnp.einsum("ecd,edf->ecf", disp, ew["w_up"])
+    h = jax.nn.silu(gate_h) * up_h
+    eout = jnp.einsum("ecf,efd->ecd", h, ew["w_down"])  # (E, C, d)
+
+    # gather back + combine with gates
+    slots = eout[flat_idx, pos]  # (T*k, d)
+    slots = jnp.where(keep[:, None], slots, 0)
+    out = (slots.reshape(T_, k, d) * gates[..., None].astype(xf.dtype)).sum(axis=1)
+    return out, aux
+
+
+def moe_mlp(p: Params, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """x (B, S, d) -> (out (B, S, d), aux load-balance loss scalar).
+
+    Tokens are dispatched within ``moe_dispatch_groups`` independent groups
+    (see configs/base.py) — at scale G = data shards so the dispatch buffer
+    is (G, E, C_local, d), sharded (data, EP, ., .), with local capacity.
+    """
+    B, S, d = x.shape
+    G = max(1, cfg.moe_dispatch_groups)
+    T_ = B * S
+    assert T_ % G == 0, (T_, G)
+    xg = x.reshape(G, T_ // G, d)
+    out, aux = jax.vmap(lambda xf: _dispatch_group(p, xf, cfg))(xg)
+    out = out.reshape(B, S, d)
+
+    if "shared" in p:
+        out = out + L.mlp_block(p["shared"], x.reshape(T_, d), "swiglu").reshape(B, S, d)
+    return out, aux.mean()
+
+
+def moe_block_apply(
+    bp: Params,
+    cfg: ModelConfig,
+    h: jax.Array,
+    positions: jax.Array,
+    cache: Optional[Params] = None,
+) -> Tuple[jax.Array, Optional[Params], jax.Array]:
+    attn_in = L.apply_norm(bp["ln1"], h, cfg.norm)
+    attn_out, new_cache = L.attention_block(
+        bp["attn"], attn_in, positions=positions, rope_theta=cfg.rope_theta,
+        causal=True, impl=cfg.attn_impl, chunk=cfg.attn_chunk,
+        q_chunk=cfg.attn_q_chunk, cache=cache,
+    )
+    h = h + attn_out
+    mlp_in = L.apply_norm(bp["ln2"], h, cfg.norm)
+    mlp_out, aux = moe_mlp(bp["moe"], mlp_in, cfg)
+    return h + mlp_out, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# full forward
+# ---------------------------------------------------------------------------
+def forward_hidden(params: Params, cfg: ModelConfig, tokens: jax.Array):
+    dtype = jnp.dtype(cfg.dtype)
+    h = L.embed(params["embed"]["tok"], tokens, dtype)
+    positions = jnp.arange(tokens.shape[1])[None, :]
+
+    aux_total = jnp.zeros((), jnp.float32)
+    if "dense_blocks" in params:
+        def dbody(h, bp):
+            bp = fsdp.gather_block(bp)
+            out, _ = T.block_apply(bp, cfg, h, positions)
+            return out, None
+        h, _ = jax.lax.scan(dbody, h, params["dense_blocks"])
+
+    def body(carry, bp):
+        h, aux = carry
+        bp = fsdp.gather_block(bp)
+        out, _, a = moe_block_apply(bp, cfg, h, positions)
+        return (out, aux + a), None
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body, prevent_cse=False)
+    (h, aux_total), _ = jax.lax.scan(body, (h, aux_total), params["moe_blocks"])
+    h = L.apply_norm(params["final_norm"], h, cfg.norm)
+    return h, aux_total
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    h, _ = forward_hidden(params, cfg, tokens)
+    return T.logits_from_hidden(params, cfg, h)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> Params:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    n_dense, n_moe = cfg.moe_first_dense, cfg.num_layers - cfg.moe_first_dense
+    cache: Params = {
+        "moe": {
+            "k": jnp.zeros((n_moe, batch, max_len, cfg.num_kv_heads, hd), dtype),
+            "v": jnp.zeros((n_moe, batch, max_len, cfg.num_kv_heads, hd), dtype),
+        },
+        "len": jnp.zeros((), jnp.int32),
+    }
+    if n_dense:
+        cache["dense"] = {
+            "k": jnp.zeros((n_dense, batch, max_len, cfg.num_kv_heads, hd), dtype),
+            "v": jnp.zeros((n_dense, batch, max_len, cfg.num_kv_heads, hd), dtype),
+        }
+    return cache
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array, cache: Params):
+    dtype = jnp.dtype(cfg.dtype)
+    h = L.embed(params["embed"]["tok"], tokens, dtype)
+    positions = cache["len"] + jnp.arange(tokens.shape[1])[None, :]
+
+    new_cache: Params = {"len": cache["len"] + tokens.shape[1]}
+    if "dense_blocks" in params:
+        def dbody(h, xs):
+            bp, kc, vc = xs
+            bp = fsdp.gather_block(bp)
+            out, nc = T.block_apply(
+                bp, cfg, h, positions, cache={"k": kc, "v": vc, "len": cache["len"]}
+            )
+            return out, (nc["k"], nc["v"])
+        h, (ks, vs) = jax.lax.scan(
+            dbody, h, (params["dense_blocks"], cache["dense"]["k"], cache["dense"]["v"])
+        )
+        new_cache["dense"] = {"k": ks, "v": vs}
+
+    def body(h, xs):
+        bp, kc, vc = xs
+        bp = fsdp.gather_block(bp)
+        out, nc, _ = moe_block_apply(
+            bp, cfg, h, positions, cache={"k": kc, "v": vc, "len": cache["len"]}
+        )
+        return out, (nc["k"], nc["v"])
+
+    h, (ks, vs) = jax.lax.scan(
+        body, h, (params["moe_blocks"], cache["moe"]["k"], cache["moe"]["v"])
+    )
+    new_cache["moe"] = {"k": ks, "v": vs}
+    h = L.apply_norm(params["final_norm"], h, cfg.norm)
+    return T.logits_from_hidden(params, cfg, h[:, -1:]), new_cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, token: jax.Array, cache: Params):
+    return prefill(params, cfg, token, cache)

@@ -1,0 +1,282 @@
+"""Mamba2 (SSD — state-space duality) blocks and the attn-free LM.
+
+The SSD chunked algorithm (Dao & Gu 2024) adapted to TPU idioms:
+  * intra-chunk term: a (Q × Q) masked-decay "attention" per chunk — dense
+    MXU-friendly einsums;
+  * inter-chunk term: a `jax.lax.scan` carrying the (B, H, N, P) state.
+Sequence cost is O(S·Q) instead of O(S²) — this is the sub-quadratic path
+that makes `long_500k` runnable.
+
+Recurrence (per head h, state size N, head dim P):
+    h_t = exp(dt_t · A) · h_{t-1} + dt_t · B_t ⊗ x_t
+    y_t = C_t · h_t + D · x_t
+with B_t, C_t shared across heads (ngroups = 1, the Mamba2 default).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import fsdp
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_mamba_block(key, cfg: ModelConfig, dtype) -> Params:
+    d, N, K = cfg.d_model, cfg.ssm_state, cfg.ssm_conv
+    H, P = cfg.ssm_num_heads, cfg.ssm_head_dim
+    conv_ch = H * P + 2 * N
+    ks = jax.random.split(key, 7)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "ln": L.init_norm(d, cfg.norm, dtype),
+        "in_z": (jax.random.normal(ks[0], (d, H, P)) * s).astype(dtype),
+        "in_x": (jax.random.normal(ks[1], (d, H, P)) * s).astype(dtype),
+        "in_B": (jax.random.normal(ks[2], (d, N)) * s).astype(dtype),
+        "in_C": (jax.random.normal(ks[3], (d, N)) * s).astype(dtype),
+        "in_dt": (jax.random.normal(ks[4], (d, H)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[5], (K, conv_ch)) * (1.0 / math.sqrt(K))).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),  # softplus(-2) ~ 0.13
+        "gnorm": {"w": jnp.ones((H * P,), dtype)},
+        "out": (jax.random.normal(ks[6], (H, P, d)) * (1.0 / math.sqrt(H * P))).astype(dtype),
+    }
+
+
+def init(rng, cfg: ModelConfig) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ke, kb, kh = jax.random.split(rng, 3)
+    blocks = [
+        init_mamba_block(k, cfg, dtype) for k in jax.random.split(kb, cfg.num_layers)
+    ]
+    return {
+        "embed": {"tok": L.init_embedding(ke, cfg.padded_vocab, cfg.d_model, dtype)},
+        "blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *blocks),
+        "final_norm": L.init_norm(cfg.d_model, cfg.norm, dtype),
+        "head": {
+            "w": (jax.random.normal(kh, (cfg.d_model, cfg.padded_vocab)) * 0.02).astype(dtype)
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv (width K) with optional carried state
+# ---------------------------------------------------------------------------
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array, state: Optional[jax.Array] = None):
+    """x (B, S, ch); w (K, ch); state (B, K-1, ch) from previous steps.
+    Returns (y (B,S,ch), new_state (B, K-1, ch))."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)  # (B, S+K-1, ch)
+    y = jnp.zeros_like(x)
+    for i in range(K):
+        y = y + xp[:, i : i + x.shape[1]] * w[i]
+    new_state = xp[:, -(K - 1) :] if K > 1 else state
+    return jax.nn.silu(y + b), new_state
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+def ssd_chunked(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H) f32, already softplus'd
+    A: jax.Array,  # (H,) f32, negative
+    Bm: jax.Array,  # (B, S, N)
+    Cm: jax.Array,  # (B, S, N)
+    chunk: int,
+    init_state: Optional[jax.Array] = None,  # (B, H, N, P)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), final_state (B,H,N,P))."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // Q
+
+    xc = x.reshape(Bsz, nc, Q, H, P)
+    dtc = dt.reshape(Bsz, nc, Q, H).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, nc, Q, N)
+    Cc = Cm.reshape(Bsz, nc, Q, N)
+
+    dA = dtc * A  # (B,nc,Q,H), negative
+    Lc = jnp.cumsum(dA, axis=2)  # inclusive cumulative log-decay
+
+    # ---- intra-chunk (quadratic within chunk only) ----
+    CB = jnp.einsum("bcqn,bckn->bcqk", Cc.astype(jnp.float32), Bc.astype(jnp.float32))
+    # decay matrix exp(L_t - L_s) for s <= t
+    diff = Lc[:, :, :, None, :] - Lc[:, :, None, :, :]  # (B,nc,Q,Q,H) = L_t - L_s
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    M = CB[..., None] * decay * dtc[:, :, None, :, :]  # (B,nc,Q,Q,H); s axis=3
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", M.astype(x.dtype), xc)
+
+    # ---- chunk summary states ----
+    w_end = jnp.exp(Lc[:, :, -1:, :] - Lc) * dtc  # (B,nc,Q,H)
+    S_chunk = jnp.einsum(
+        "bckn,bckh,bckhp->bchnp",
+        Bc.astype(jnp.float32), w_end, xc.astype(jnp.float32),
+    )  # (B,nc,H,N,P)
+    chunk_decay = jnp.exp(Lc[:, :, -1, :])  # (B,nc,H)
+
+    # ---- inter-chunk recurrence ----
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, N, P), jnp.float32)
+
+    def body(carry, xs):
+        s_c, cdec, C_c, L_c = xs  # (B,H,N,P), (B,H), (B,Q,N), (B,Q,H)
+        y_in = jnp.einsum(
+            "bqn,bhnp,bqh->bqhp", C_c.astype(jnp.float32), carry, jnp.exp(L_c)
+        )
+        new = carry * cdec[:, :, None, None] + s_c
+        return new, y_in
+
+    xs = (
+        S_chunk.transpose(1, 0, 2, 3, 4),
+        chunk_decay.transpose(1, 0, 2),
+        Cc.transpose(1, 0, 2, 3),
+        Lc.transpose(1, 0, 2, 3),
+    )
+    final_state, y_inter = jax.lax.scan(body, init_state.astype(jnp.float32), xs)
+    y_inter = y_inter.transpose(1, 0, 2, 3, 4).reshape(Bsz, Sp, H, P)
+
+    y = y_intra.reshape(Bsz, Sp, H, P).astype(jnp.float32) + y_inter
+    return y[:, :S].astype(x.dtype), final_state
+
+
+def ssd_step(
+    x: jax.Array,  # (B, 1, H, P)
+    dt: jax.Array,  # (B, 1, H)
+    A: jax.Array,
+    Bm: jax.Array,  # (B, 1, N)
+    Cm: jax.Array,
+    state: jax.Array,  # (B, H, N, P) f32
+) -> Tuple[jax.Array, jax.Array]:
+    """Single-token recurrent update (decode)."""
+    dt = dt[:, 0].astype(jnp.float32)  # (B,H)
+    a = jnp.exp(dt * A)  # (B,H)
+    dBx = jnp.einsum(
+        "bn,bh,bhp->bhnp",
+        Bm[:, 0].astype(jnp.float32), dt, x[:, 0].astype(jnp.float32),
+    )
+    new_state = state * a[:, :, None, None] + dBx
+    y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0].astype(jnp.float32), new_state)
+    return y[:, None].astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# full mamba block (norm -> projections -> conv -> SSD -> gated norm -> out)
+# ---------------------------------------------------------------------------
+def mamba_block_apply(
+    bp: Params,
+    cfg: ModelConfig,
+    h: jax.Array,
+    state: Optional[Params] = None,  # {"conv": (B,K-1,ch), "ssm": (B,H,N,P)}
+) -> Tuple[jax.Array, Optional[Params]]:
+    Bsz, S, d = h.shape
+    H, P, N = cfg.ssm_num_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+    u = L.apply_norm(bp["ln"], h, cfg.norm)
+    z = jnp.einsum("bsd,dhp->bshp", u, bp["in_z"])
+    x = jnp.einsum("bsd,dhp->bshp", u, bp["in_x"])
+    Bm = u @ bp["in_B"]
+    Cm = u @ bp["in_C"]
+    dt_raw = jnp.einsum("bsd,dh->bsh", u, bp["in_dt"])
+
+    xbc = jnp.concatenate([x.reshape(Bsz, S, H * P), Bm, Cm], axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    xbc, new_conv = causal_conv(xbc, bp["conv_w"], bp["conv_b"], conv_state)
+    x = xbc[..., : H * P].reshape(Bsz, S, H, P)
+    Bm = xbc[..., H * P : H * P + N]
+    Cm = xbc[..., H * P + N :]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + bp["dt_bias"])
+    A = -jnp.exp(bp["A_log"])
+
+    if state is not None and S == 1:
+        y, new_ssm = ssd_step(x, dt, A, Bm, Cm, state["ssm"])
+    else:
+        init_state = state["ssm"] if state is not None else None
+        y, new_ssm = ssd_chunked(x, dt, A, Bm, Cm, cfg.ssm_chunk, init_state)
+
+    y = y + bp["D"].astype(y.dtype)[None, None, :, None] * x
+    yf = y.reshape(Bsz, S, H * P) * jax.nn.silu(z.reshape(Bsz, S, H * P))
+    yf = L.rms_norm(yf, bp["gnorm"]["w"])
+    out = jnp.einsum("bshp,hpd->bsd", yf.reshape(Bsz, S, H, P), bp["out"])
+
+    new_state = None
+    if state is not None:
+        new_state = {"conv": new_conv, "ssm": new_ssm}
+    return h + out, new_state
+
+
+# ---------------------------------------------------------------------------
+# LM forward / serving
+# ---------------------------------------------------------------------------
+def forward_hidden(params: Params, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    dtype = jnp.dtype(cfg.dtype)
+    h = L.embed(params["embed"]["tok"], tokens, dtype)
+
+    def body(h, bp):
+        bp = fsdp.gather_block(bp)
+        out, _ = mamba_block_apply(bp, cfg, h)
+        return out, None
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = jax.lax.scan(body, h, params["blocks"])
+    return L.apply_norm(params["final_norm"], h, cfg.norm)
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    h = forward_hidden(params, cfg, tokens)
+    return L.lm_logits(params["head"]["w"], h)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> Params:
+    """Mamba cache is O(1) in sequence length."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    H, P, N, K = cfg.ssm_num_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_conv
+    ch = H * P + 2 * N
+    Lr = cfg.num_layers
+    return {
+        "conv": jnp.zeros((Lr, batch, K - 1, ch), dtype),
+        "ssm": jnp.zeros((Lr, batch, H, N, P), jnp.float32),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array, cache: Params):
+    dtype = jnp.dtype(cfg.dtype)
+    h = L.embed(params["embed"]["tok"], tokens, dtype)
+
+    def body(h, xs):
+        bp, conv_s, ssm_s = xs
+        out, ns = mamba_block_apply(bp, cfg, h, state={"conv": conv_s, "ssm": ssm_s})
+        return out, (ns["conv"], ns["ssm"])
+
+    h, (convs, ssms) = jax.lax.scan(body, h, (params["blocks"], cache["conv"], cache["ssm"]))
+    new_cache = {"conv": convs, "ssm": ssms, "len": cache["len"] + tokens.shape[1]}
+    h = L.apply_norm(params["final_norm"], h, cfg.norm)
+    return L.lm_logits(params["head"]["w"], h[:, -1:]), new_cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, token: jax.Array, cache: Params):
+    return prefill(params, cfg, token, cache)

@@ -1,0 +1,175 @@
+"""Decoder-only dense transformer (Llama/Qwen/Nemotron/Mistral families).
+
+Layer-stacked params consumed via ``jax.lax.scan`` so HLO size is O(1) in
+depth. Exposes the block-level API EBFT needs:
+
+    init(rng, cfg)                   -> params
+    forward(params, cfg, tokens)     -> (logits, final_hidden)
+    block_apply(bp, cfg, h, pos)     -> h'          (one transformer block)
+    prefill / decode_step / init_cache
+
+Params layout (leading L axis on every "blocks" leaf):
+    embed/tok            (V, d)
+    blocks/ln1/w         (L, d)         blocks/ln2/w (L, d)
+    blocks/attn/wq       (L, d, H, hd)  ... wk, wv (L, d, Hkv, hd), wo (L,H,hd,d)
+    blocks/mlp/w_up      (L, d, ff)     w_gate (swiglu), w_down (L, ff, d)
+    final_norm/w         (d,)
+    head/w               (d, V)         (absent if tie_embeddings)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import fsdp
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_block(key, cfg: ModelConfig, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    p: Params = {
+        "ln1": L.init_norm(d, cfg.norm, dtype),
+        "ln2": L.init_norm(d, cfg.norm, dtype),
+        "attn": L.init_attention(k1, d, cfg.num_heads, cfg.num_kv_heads, hd, cfg.qkv_bias, dtype),
+        "mlp": L.init_mlp(k2, d, cfg.d_ff, cfg.mlp_act, dtype),
+    }
+    return p
+
+
+def _stack_blocks(keys, init_one) -> Params:
+    blocks = [init_one(k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+
+
+def init(rng, cfg: ModelConfig) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ke, kb, kh = jax.random.split(rng, 3)
+    params: Params = {
+        "embed": {"tok": L.init_embedding(ke, cfg.padded_vocab, cfg.d_model, dtype)},
+        "blocks": _stack_blocks(
+            jax.random.split(kb, cfg.num_layers), lambda k: init_block(k, cfg, dtype)
+        ),
+        "final_norm": L.init_norm(cfg.d_model, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = {
+            "w": L.init_embedding(kh, cfg.d_model, cfg.padded_vocab, dtype).T.reshape(
+                cfg.d_model, cfg.padded_vocab
+            )
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# single-block apply (shared by scan body and by EBFT's per-block fine-tuning)
+# ---------------------------------------------------------------------------
+def block_apply(
+    bp: Params,
+    cfg: ModelConfig,
+    h: jax.Array,
+    positions: jax.Array,
+    cache: Optional[Params] = None,
+) -> Tuple[jax.Array, Optional[Params]]:
+    attn_in = L.apply_norm(bp["ln1"], h, cfg.norm)
+    attn_out, new_cache = L.attention_block(
+        bp["attn"],
+        attn_in,
+        positions=positions,
+        rope_theta=cfg.rope_theta,
+        causal=True,
+        impl=cfg.attn_impl,
+        chunk=cfg.attn_chunk,
+        q_chunk=cfg.attn_q_chunk,
+        cache=cache,
+    )
+    h = h + attn_out
+    mlp_in = L.apply_norm(bp["ln2"], h, cfg.norm)
+    h = h + L.mlp_block(bp["mlp"], mlp_in, cfg.mlp_act)
+    return h, new_cache
+
+
+# ---------------------------------------------------------------------------
+# full forward (training): scan over blocks
+# ---------------------------------------------------------------------------
+def forward_hidden(
+    params: Params, cfg: ModelConfig, tokens: jax.Array, positions: Optional[jax.Array] = None
+) -> jax.Array:
+    """tokens (B, S) -> final hidden states (B, S, d)."""
+    dtype = jnp.dtype(cfg.dtype)
+    h = L.embed(params["embed"]["tok"], tokens, dtype)
+    if positions is None:
+        positions = jnp.arange(tokens.shape[1])[None, :]
+
+    def body(h, bp):
+        bp = fsdp.gather_block(bp)  # ZeRO-3 gather-at-use (no-op w/o policy)
+        out, _ = block_apply(bp, cfg, h, positions)
+        return out, None
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = jax.lax.scan(body, h, params["blocks"])
+    return L.apply_norm(params["final_norm"], h, cfg.norm)
+
+
+def logits_from_hidden(params: Params, cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    w = params["head"]["w"] if "head" in params else params["embed"]["tok"].T
+    return L.lm_logits(w, h)
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    return logits_from_hidden(params, cfg, forward_hidden(params, cfg, tokens))
+
+
+# ---------------------------------------------------------------------------
+# KV-cache serving
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> Params:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    shape = (cfg.num_layers, batch, max_len, cfg.num_kv_heads, hd)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def _scan_with_cache(params, cfg, h, positions, cache):
+    def body(carry, xs):
+        h = carry
+        bp, kc, vc = xs
+        bp = fsdp.gather_block(bp)  # serve-path ZeRO-3 gather-at-use
+        out, nc = block_apply(
+            bp, cfg, h, positions, cache={"k": kc, "v": vc, "len": cache["len"]}
+        )
+        return out, (nc["k"], nc["v"])
+
+    h, (ks, vs) = jax.lax.scan(body, h, (params["blocks"], cache["k"], cache["v"]))
+    new_cache = {"k": ks, "v": vs, "len": cache["len"] + positions.shape[-1]}
+    return h, new_cache
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array, cache: Params):
+    """Run the prompt through the model, filling the cache. Returns
+    (last-position logits, cache)."""
+    dtype = jnp.dtype(cfg.dtype)
+    h = L.embed(params["embed"]["tok"], tokens, dtype)
+    positions = cache["len"] + jnp.arange(tokens.shape[1])[None, :]
+    h, cache = _scan_with_cache(params, cfg, h, positions, cache)
+    h = L.apply_norm(params["final_norm"], h, cfg.norm)
+    return logits_from_hidden(params, cfg, h[:, -1:]), cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, token: jax.Array, cache: Params):
+    """token (B, 1) -> (logits (B,1,V), new cache)."""
+    return prefill(params, cfg, token, cache)

@@ -1,0 +1,67 @@
+"""LLaVA-NeXT-style VLM: Mistral-7B LM backbone + stub vision frontend.
+
+Per the assignment the vision tower is a STUB — ``input_specs()`` supplies
+precomputed anyres patch embeddings (B, num_patches, d_model) which are
+prepended to the token embeddings. Loss is computed on text positions only.
+The LM backbone is the dense transformer (shared implementation).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import fsdp
+from repro.models import layers as L
+from repro.models import transformer as T
+
+Params = Dict[str, Any]
+
+
+def init(rng, cfg: ModelConfig) -> Params:
+    return T.init(rng, cfg)  # stub frontend has no trainable params here
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jax.Array, patches: jax.Array) -> jax.Array:
+    """tokens (B, S_text), patches (B, P, d) -> logits over text positions.
+
+    The multimodal sequence is [patches ; text]; returned logits cover only
+    the text segment (callers compute next-token loss on text).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    tok_emb = L.embed(params["embed"]["tok"], tokens, dtype)
+    h = jnp.concatenate([patches.astype(dtype), tok_emb], axis=1)
+    positions = jnp.arange(h.shape[1])[None, :]
+
+    def body(h, bp):
+        bp = fsdp.gather_block(bp)
+        out, _ = T.block_apply(bp, cfg, h, positions)
+        return out, None
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = jax.lax.scan(body, h, params["blocks"])
+    h = L.apply_norm(params["final_norm"], h, cfg.norm)
+    text_h = h[:, patches.shape[1] :]
+    return T.logits_from_hidden(params, cfg, text_h)
+
+
+# serving: the image prefix is prefilled into the same KV cache as text.
+init_cache = T.init_cache
+
+
+def prefill_multimodal(params, cfg, tokens, patches, cache):
+    """Prefill [patches ; text] into the cache, return last-token logits."""
+    dtype = jnp.dtype(cfg.dtype)
+    tok_emb = L.embed(params["embed"]["tok"], tokens, dtype)
+    h = jnp.concatenate([patches.astype(dtype), tok_emb], axis=1)
+    positions = cache["len"] + jnp.arange(h.shape[1])[None, :]
+    h, new_cache = T._scan_with_cache(params, cfg, h, positions, cache)
+    h = L.apply_norm(params["final_norm"], h, cfg.norm)
+    return T.logits_from_hidden(params, cfg, h[:, -1:]), new_cache
+
+
+prefill = prefill_multimodal
+decode_step = T.decode_step

@@ -1,0 +1,135 @@
+"""Optimizers from scratch (no optax): SGD-momentum, Adam, AdamW.
+
+Interface mirrors the (init, update) pair convention:
+
+    opt = adam(lr=2e-4)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+``lr`` may be a float or a schedule ``f(step) -> float`` from
+``repro.optim.schedules``. All states are pytrees (checkpointable,
+shardable — each moment leaf inherits its param's sharding; ZeRO-1
+partitioning is applied in distributed/sharding.py).
+
+EBFT note: the paper fine-tunes one block at a time with Adam-style steps
+at lr 2e-4; masked leaves get their gradient multiplied by the mask inside
+the EBFT step (core/ebft.py), so the optimizer itself stays generic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Union[float, Callable[[jax.Array], jax.Array]]
+
+
+def _lr_at(lr: Schedule, step: jax.Array) -> jax.Array:
+    if callable(lr):
+        return jnp.asarray(lr(step), jnp.float32)
+    return jnp.asarray(lr, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]  # (grads, state, params) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+# ---------------------------------------------------------------------------
+def sgd(lr: Schedule, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        mu = (
+            jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+            if momentum
+            else None
+        )
+        return {"step": jnp.zeros((), jnp.int32), "mu": mu}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = _lr_at(lr, step)
+        if momentum:
+            mu = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(jnp.float32), state["mu"], grads
+            )
+            if nesterov:
+                upd = jax.tree.map(
+                    lambda m, g: -(lr_t * (momentum * m + g.astype(jnp.float32))),
+                    mu,
+                    grads,
+                )
+            else:
+                upd = jax.tree.map(lambda m: -lr_t * m, mu)
+            return upd, {"step": step, "mu": mu}
+        upd = jax.tree.map(lambda g: -lr_t * g.astype(jnp.float32), grads)
+        return upd, {"step": step, "mu": None}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+def adam(
+    lr: Schedule,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    """Adam (weight_decay>0 makes it AdamW: decoupled decay)."""
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+        }
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = _lr_at(lr, step)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        m = jax.tree.map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32), state["m"], grads
+        )
+        v = jax.tree.map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"],
+            grads,
+        )
+
+        def u(m_, v_, p=None):
+            upd = -(lr_t * (m_ / c1) / (jnp.sqrt(v_ / c2) + eps))
+            if weight_decay and p is not None:
+                upd = upd - lr_t * weight_decay * p.astype(jnp.float32)
+            return upd
+
+        if weight_decay and params is not None:
+            updates = jax.tree.map(u, m, v, params)
+        else:
+            updates = jax.tree.map(u, m, v)
+        return updates, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: Schedule, weight_decay: float = 0.1, **kw) -> Optimizer:
+    return adam(lr, weight_decay=weight_decay, **kw)
+
+
+# ---------------------------------------------------------------------------
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn

@@ -1,0 +1,46 @@
+"""Learning-rate schedules (plain callables: step -> lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.full((), lr, jnp.float32)
+
+
+def warmup_cosine(peak: float, warmup: int, total: int, floor: float = 0.0):
+    """Linear warmup to ``peak`` over ``warmup`` steps then cosine to floor."""
+
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / jnp.maximum(warmup, 1)
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+
+    return f
+
+
+def linear_decay(peak: float, warmup: int, total: int, floor: float = 0.0):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / jnp.maximum(warmup, 1)
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        lin = peak + (floor - peak) * t
+        return jnp.where(step < warmup, warm, lin)
+
+    return f
+
+
+def plateau_early_stop(history, patience: int = 3, rel_tol: float = 1e-3) -> bool:
+    """Host-side convergence check used by the EBFT per-block loop (the
+    paper's "loss unchanged or changes within a small range" criterion).
+
+    ``history`` is a list of float losses; returns True when the best loss
+    has not improved by ``rel_tol`` (relative) for ``patience`` epochs.
+    """
+    if len(history) < patience + 1:
+        return False
+    best_before = min(history[:-patience])
+    recent_best = min(history[-patience:])
+    return recent_best > best_before * (1.0 - rel_tol)

@@ -1,0 +1,135 @@
+"""Batched serving: prefill + decode loops with continuous batching.
+
+``Server`` wraps a Model with jitted prefill/decode steps and a minimal
+continuous-batching scheduler: a fixed pool of B slots; finished sequences
+free their slot and queued requests are prefilled into it. The KV cache is
+allocated once (B, max_len) and slots are recycled — the paper-relevant
+part is that sparse (EBFT-fine-tuned) weights drop straight in, since the
+serve path reads the same param pytree as training.
+
+Decode sampling is greedy or temperature; everything is jit-compiled once
+per (batch, len) bucket.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new: int = 32
+    out: Optional[List[int]] = None
+
+
+class Server:
+    def __init__(self, model, params, batch_size: int, max_len: int, temperature: float = 0.0):
+        self.model = model
+        self.params = params
+        self.B = batch_size
+        self.max_len = max_len
+        self.temperature = temperature
+
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode_step)
+
+    def _sample(self, logits: jax.Array, rng) -> jax.Array:
+        logits = logits[:, -1]
+        if self.temperature <= 0:
+            return jnp.argmax(logits, axis=-1)
+        return jax.random.categorical(rng, logits / self.temperature, axis=-1)
+
+    def generate(self, prompts: List[np.ndarray], max_new: int = 32, seed: int = 0):
+        """One-shot batched generation (prompts padded to a bucket)."""
+        assert len(prompts) <= self.B
+        B = len(prompts)
+        S = max(len(p) for p in prompts)
+        toks = np.zeros((B, S), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, S - len(p):] = p  # left-pad so last position aligns
+        state = self.model.init_serve_state(B, S + max_new)
+        batch = {"tokens": jnp.asarray(toks)}
+        logits, state = self._prefill(self.params, batch, state)
+        rng = jax.random.PRNGKey(seed)
+        outs = [[] for _ in range(B)]
+        tok = self._sample(logits, rng)
+        for step in range(max_new):
+            for i in range(B):
+                outs[i].append(int(tok[i]))
+            rng, sub = jax.random.split(rng)
+            logits, state = self._decode(self.params, tok[:, None].astype(jnp.int32), state)
+            tok = self._sample(logits, sub)
+        return outs
+
+    # ------------------------------------------------------------------
+    def serve(self, requests: List[Request], seed: int = 0) -> Dict[int, List[int]]:
+        """Continuous batching: slots are freed as sequences finish and
+        refilled from the queue. Single-slot prefill keeps the example
+        simple; a production server would bucket prefills."""
+        queue = list(requests)
+        results: Dict[int, List[int]] = {}
+        active: List[Optional[Request]] = [None] * self.B
+        remaining = np.zeros(self.B, np.int64)
+        state = self.model.init_serve_state(self.B, self.max_len)
+        last_tok = jnp.zeros((self.B, 1), jnp.int32)
+        rng = jax.random.PRNGKey(seed)
+
+        def admit():
+            nonlocal state, last_tok
+            for slot in range(self.B):
+                if active[slot] is None and queue:
+                    req = queue.pop(0)
+                    active[slot] = req
+                    req.out = []
+                    remaining[slot] = req.max_new
+                    # single-sequence prefill into this slot
+                    sub = self.model.init_serve_state(1, self.max_len)
+                    logits, sub = self._prefill(
+                        self.params, {"tokens": jnp.asarray(req.prompt[None])}, sub
+                    )
+                    state = jax.tree.map(
+                        lambda full, one: _slot_update(full, one, slot), state, sub
+                    )
+                    tok = int(jnp.argmax(logits[0, -1]))
+                    req.out.append(tok)
+                    last_tok = last_tok.at[slot, 0].set(tok)
+                    remaining[slot] -= 1
+
+        admit()
+        while any(a is not None for a in active):
+            rng, sub = jax.random.split(rng)
+            logits, state = self._decode(self.params, last_tok, state)
+            tok = self._sample(logits, sub)
+            for slot in range(self.B):
+                req = active[slot]
+                if req is None:
+                    continue
+                t = int(tok[slot])
+                req.out.append(t)
+                remaining[slot] -= 1
+                if remaining[slot] <= 0:
+                    results[req.uid] = req.out
+                    active[slot] = None
+            last_tok = tok[:, None].astype(jnp.int32)
+            admit()
+        return results
+
+
+def _slot_update(full: jax.Array, one: jax.Array, slot: int) -> jax.Array:
+    """Write a single-sequence state into batch slot ``slot``. Batch dim is
+    the first dim where shapes differ (full=B, one=1); scalars merge by max
+    (the shared ``len`` counter)."""
+    if full.ndim == 0:
+        return jnp.maximum(full, one)
+    for axis in range(full.ndim):
+        if full.shape[axis] != one.shape[axis]:
+            idx = [slice(None)] * full.ndim
+            idx[axis] = slice(slot, slot + 1)
+            return full.at[tuple(idx)].set(one.astype(full.dtype))
+    return one.astype(full.dtype)  # identical shapes: shared state

@@ -1,0 +1,246 @@
+"""Masked parameter pytrees + sparsity pattern utilities.
+
+Central conventions used by every pruning method and by EBFT:
+
+* A **mask pytree** mirrors the param pytree. Prunable leaves carry a
+  {0,1} array of the leaf's shape; non-prunable leaves carry a scalar 1.0
+  (broadcasts in ``apply_masks`` at zero memory cost).
+* **Prunable leaves** are the ≥2-D linear weights of each block (attention
+  projections, MLP/expert matrices, Mamba in/out projections and conv).
+  Routers, norms, biases, embeddings, LM head, and SSD dynamics (A_log, D,
+  dt_bias) are never pruned (DESIGN.md §5).
+* Every prunable leaf has a **canonical (reduction, out) 2-D view** via
+  ``to_matrix`` — pruning scores, N:M groups, and SparseGPT Hessians all
+  operate in this view; ``from_matrix`` restores the leaf shape. N:M groups
+  run along the *reduction* axis (the dim a sparse-tensor-core / our
+  nm_spmm kernel would exploit).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+# leaf names that are prunable (last path component)
+PRUNABLE_NAMES = frozenset(
+    {
+        "wq", "wk", "wv", "wo",                  # attention projections
+        "w_up", "w_gate", "w_down",              # MLP / expert FFNs
+        "in_z", "in_x", "in_B", "in_C", "in_dt", # Mamba2 in-projections
+        "out", "conv_w",                         # Mamba2 out-proj / dw-conv
+    }
+)
+# path components that veto pruning wherever they appear
+PROTECTED_PARENTS = frozenset({"router", "embed", "head", "gnorm"})
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+        else:
+            out.append(str(p))
+    return tuple(out)
+
+
+def is_prunable(path, leaf) -> bool:
+    names = _path_names(path)
+    if not names or names[-1] not in PRUNABLE_NAMES:
+        return False
+    if any(n in PROTECTED_PARENTS for n in names):
+        return False
+    return getattr(leaf, "ndim", 0) >= 2
+
+
+def map_prunable(fn: Callable, params: Params, *rest) -> Params:
+    """tree_map over prunable leaves only; others pass through unchanged
+    (from ``params``). ``fn(name, leaf, *rest_leaves)``."""
+
+    def g(path, leaf, *r):
+        if is_prunable(path, leaf):
+            return fn(_path_names(path)[-1], leaf, *r)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(g, params, *rest)
+
+
+def ones_masks(params: Params) -> Params:
+    """All-dense masks: prunable leaves get full ones, others scalar 1."""
+
+    def g(path, leaf):
+        if is_prunable(path, leaf):
+            return jnp.ones(leaf.shape, jnp.float32)
+        return jnp.ones((), jnp.float32)
+
+    return jax.tree_util.tree_map_with_path(g, params)
+
+
+def apply_masks(params: Params, masks: Params) -> Params:
+    return jax.tree.map(lambda p, m: (p * m.astype(p.dtype)), params, masks)
+
+
+def mask_gradients(grads: Params, masks: Params) -> Params:
+    """Subgradient of W̄ = M ⊙ W: zero the gradient on pruned slots."""
+    return jax.tree.map(lambda g, m: g * m.astype(g.dtype), grads, masks)
+
+
+def sparsity_of(masks: Params, params: Params) -> float:
+    """Fraction of *prunable* weights that are zeroed."""
+    kept = total = 0.0
+
+    def g(path, leaf, m):
+        nonlocal kept, total
+        if is_prunable(path, leaf):
+            kept += float(jnp.sum(m))
+            total += float(m.size)
+        return leaf
+
+    jax.tree_util.tree_map_with_path(g, params, masks)
+    return 1.0 - kept / max(total, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# canonical (reduction, out) 2-D views
+# ---------------------------------------------------------------------------
+# name -> number of leading axes that are reduction axes (after any expert
+# batch axis). The remaining trailing axes are output axes.
+_REDUCTION_LEAD = {
+    "wq": 1, "wk": 1, "wv": 1,   # (d | H, hd)
+    "wo": 2,                      # (H, hd | d)
+    "w_up": 1, "w_gate": 1,       # (d | ff)
+    "w_down": 1,                  # (ff | d)
+    "in_z": 1, "in_x": 1, "in_B": 1, "in_C": 1, "in_dt": 1,  # (d | ...)
+    "out": 2,                     # (H, P | d)
+    "conv_w": 1,                  # (K | ch)  depthwise conv taps
+}
+
+
+def reduction_axes(name: str, ndim: int, batched: bool) -> int:
+    return _REDUCTION_LEAD[name]
+
+
+def is_expert_batched(name: str, leaf: jax.Array) -> bool:
+    """Expert leaves carry a leading E axis: (E, d, ff) / (E, ff, d)."""
+    return name in ("w_up", "w_gate", "w_down") and leaf.ndim == 3
+
+
+def to_matrix(name: str, leaf: jax.Array) -> Tuple[jax.Array, Tuple]:
+    """Leaf -> (R, O) matrix (or (E, R, O) for expert leaves) + shape tag."""
+    if is_expert_batched(name, leaf):
+        return leaf, ("expert", leaf.shape)
+    lead = _REDUCTION_LEAD[name]
+    r = 1
+    for s in leaf.shape[:lead]:
+        r *= s
+    o = 1
+    for s in leaf.shape[lead:]:
+        o *= s
+    return leaf.reshape(r, o), ("flat", leaf.shape)
+
+
+def from_matrix(mat: jax.Array, tag: Tuple) -> jax.Array:
+    kind, shape = tag
+    return mat.reshape(shape)
+
+
+# logical (unstacked) rank per prunable leaf name — anything beyond these
+# dims is a stack axis (L layers, (G,K) hybrid groups, E experts...)
+_LOGICAL_NDIM = {
+    "wq": 3, "wk": 3, "wv": 3, "wo": 3,
+    "w_up": 2, "w_gate": 2, "w_down": 2,
+    "in_z": 3, "in_x": 3, "in_B": 2, "in_C": 2, "in_dt": 2,
+    "out": 3, "conv_w": 2,
+}
+
+
+def to_matrix_stacked(name: str, leaf: jax.Array) -> Tuple[jax.Array, Tuple]:
+    """Like ``to_matrix`` but tolerates leading stack axes (whole-tree
+    consumers like magnitude pruning see (L, ...) / (L, E, ...) leaves):
+    returns (S..., R, O) with all stack dims preserved up front."""
+    n_log = _LOGICAL_NDIM[name]
+    lead = _REDUCTION_LEAD[name]
+    stack = leaf.shape[: leaf.ndim - n_log]
+    logical = leaf.shape[leaf.ndim - n_log:]
+    r = 1
+    for s in logical[:lead]:
+        r *= s
+    o = 1
+    for s in logical[lead:]:
+        o *= s
+    return leaf.reshape(*stack, r, o), ("stacked", leaf.shape)
+
+
+# ---------------------------------------------------------------------------
+# mask construction from scores
+# ---------------------------------------------------------------------------
+def topk_mask_rows(scores: jax.Array, sparsity: float) -> jax.Array:
+    """Per-output-column unstructured mask: for each column of the (R, O)
+    score matrix keep the top (1-sparsity) fraction along the reduction
+    axis (Wanda's per-output comparison group)."""
+    R = scores.shape[-2]
+    keep = max(1, int(round(R * (1.0 - sparsity))))
+    # rank along reduction axis
+    idx = jnp.argsort(jnp.argsort(-scores, axis=-2), axis=-2)  # 0 = biggest
+    return (idx < keep).astype(jnp.float32)
+
+
+def global_topk_mask(scores: jax.Array, sparsity: float) -> jax.Array:
+    """Per-matrix top-k mask (magnitude pruning's comparison group). With
+    leading stack dims (..., R, O) the threshold is per stacked slice
+    (= per-layer magnitude pruning)."""
+    r, o = scores.shape[-2:]
+    n = r * o
+    keep = max(1, int(round(n * (1.0 - sparsity))))
+    flat = scores.reshape(*scores.shape[:-2], n)
+    thresh = jax.lax.top_k(flat, keep)[0][..., -1]
+    return (scores >= thresh[..., None, None]).astype(jnp.float32)
+
+
+def nm_mask(scores: jax.Array, n: int, m: int) -> jax.Array:
+    """N:M mask along the reduction axis of an (..., R, O) score matrix:
+    within every group of ``m`` consecutive reduction slots, keep the ``n``
+    highest-scoring. R must be divisible by m (all assigned archs are)."""
+    *lead, R, O = scores.shape
+    assert R % m == 0, f"reduction dim {R} not divisible by M={m}"
+    g = scores.reshape(*lead, R // m, m, O)
+    rank = jnp.argsort(jnp.argsort(-g, axis=-2), axis=-2)
+    return (rank < n).astype(jnp.float32).reshape(*lead, R, O)
+
+
+# ---------------------------------------------------------------------------
+# N:M compressed representation (for kernels/nm_spmm)
+# ---------------------------------------------------------------------------
+def nm_compress(w: jax.Array, mask: jax.Array, n: int, m: int):
+    """Dense (R, O) weight + N:M mask -> (values (R//m*n, O), idx (R//m*n, O) int8).
+
+    idx holds each kept slot's offset within its M-group (0..m-1) — the
+    layout the nm_spmm Pallas kernel consumes (2-bit-packable; stored int8).
+    """
+    R, O = w.shape
+    G = R // m
+    wg = (w * mask).reshape(G, m, O)
+    mg = mask.reshape(G, m, O)
+    # order kept slots first within each group (stable by offset)
+    order = jnp.argsort(-mg, axis=1, stable=True)  # kept (1) before dropped
+    top = order[:, :n, :]  # (G, n, O) offsets of kept slots
+    vals = jnp.take_along_axis(wg, top, axis=1)  # (G, n, O)
+    return vals.reshape(G * n, O), top.astype(jnp.int8).reshape(G * n, O)
+
+
+def nm_decompress(vals: jax.Array, idx: jax.Array, n: int, m: int) -> jax.Array:
+    """Inverse of nm_compress -> dense (R, O)."""
+    GN, O = vals.shape
+    G = GN // n
+    v = vals.reshape(G, n, O)
+    ix = idx.reshape(G, n, O).astype(jnp.int32)
+    dense = jnp.zeros((G, m, O), vals.dtype)
+    gi = jnp.arange(G)[:, None, None]
+    oi = jnp.arange(O)[None, None, :]
+    dense = dense.at[gi, ix, oi].set(v)
+    return dense.reshape(G * m, O)

@@ -1,0 +1,189 @@
+"""Per-linear activation taps.
+
+Wanda needs per-linear input column norms ‖X_j‖₂; SparseGPT needs the
+per-linear Gram matrix H = X Xᵀ (over the reduction dim). Both are
+*inputs to each linear inside a block*, which differ per layer (ln1(h) for
+q/k/v, attention context for wo, the post-norm stream for the MLP, ...).
+
+``linear_inputs(family)`` returns a function
+    taps(bp, cfg, h, positions, **aux) -> {leaf_name: activation (T, R)}
+that replays one block functionally (reusing the model-layer code so the
+replay can never drift from the real forward) and returns, for every
+prunable leaf name, the activation matrix whose reduction-axis statistics
+the pruning methods consume. Expert leaves get the *dispatched* per-expert
+activations (E, C, d) so expert-wise stats are exact.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+
+Params = Dict[str, Any]
+
+
+def _flat(x: jax.Array) -> jax.Array:
+    """(B, S, R) -> (B*S, R)"""
+    return x.reshape(-1, x.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+def _attn_taps(bp: Params, cfg: ModelConfig, h, positions, out: Dict[str, jax.Array]):
+    """Taps for one attention sub-block. Returns the post-attn stream."""
+    attn_in = L.apply_norm(bp["ln1"], h, cfg.norm)
+    out["wq"] = out["wk"] = out["wv"] = _flat(attn_in)
+    q, k, v = L.qkv_proj(bp["attn"], attn_in)
+    hd = bp["attn"]["wq"].shape[-1]
+    cos, sin = L.rope_table(positions, hd, cfg.rope_theta)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+    o = L.attend(q, k, v, causal=True, impl=cfg.attn_impl, chunk=cfg.attn_chunk)
+    out["wo"] = o.reshape(-1, o.shape[-2] * o.shape[-1])  # (T, H*hd)
+    return h + L.out_proj(bp["attn"], o)
+
+
+def _mlp_taps(p: Params, cfg: ModelConfig, x, out: Dict[str, jax.Array], act: str):
+    out["w_up"] = _flat(x)
+    if "w_gate" in p:
+        out["w_gate"] = _flat(x)
+    up = x @ p["w_up"]
+    if act == "swiglu":
+        hidden = jax.nn.silu(x @ p["w_gate"]) * up
+    elif act == "sq_relu":
+        hidden = jnp.square(jax.nn.relu(up))
+    else:
+        hidden = jax.nn.gelu(up)
+    out["w_down"] = _flat(hidden)
+    return hidden @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+def dense_taps(bp, cfg, h, positions, **aux):
+    out: Dict[str, jax.Array] = {}
+    h = _attn_taps(bp, cfg, h, positions, out)
+    mlp_in = L.apply_norm(bp["ln2"], h, cfg.norm)
+    _mlp_taps(bp["mlp"], cfg, mlp_in, out, cfg.mlp_act)
+    return out
+
+
+def moe_taps(bp, cfg, h, positions, **aux):
+    if "moe" not in bp:  # leading dense block of a MoE stack
+        return dense_taps(bp, cfg, h, positions)
+    out: Dict[str, jax.Array] = {}
+    h = _attn_taps(bp, cfg, h, positions, out)
+    mlp_in = L.apply_norm(bp["ln2"], h, cfg.norm)
+    xf = _flat(mlp_in)
+    # replay routing to get per-expert dispatched inputs (E, C, d)
+    p = bp["moe"]
+    gates, idx, _ = MOE.route(p["router"]["w"], xf, cfg.moe_top_k)
+    E, k = cfg.moe_num_experts, cfg.moe_top_k
+    T_ = xf.shape[0]
+    C = max(1, int(cfg.moe_capacity_factor * T_ * k / E))
+    flat_idx = idx.reshape(-1)
+    onehot = jax.nn.one_hot(flat_idx, E, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - 1
+    pos = jnp.take_along_axis(pos, flat_idx[:, None], axis=1)[:, 0]
+    keep = pos < C
+    pos_c = jnp.where(keep, pos, 0)
+    x_rep = jnp.repeat(xf, k, axis=0)
+    disp = jnp.zeros((E, C, xf.shape[-1]), xf.dtype)
+    disp = disp.at[flat_idx, pos_c].add(
+        jnp.where(keep[:, None], x_rep, 0).astype(xf.dtype), mode="drop"
+    )
+    out["w_up"] = out["w_gate"] = disp  # (E, C, d) expert-batched
+    ew = p["experts"]
+    hidden = jax.nn.silu(jnp.einsum("ecd,edf->ecf", disp, ew["w_gate"])) * jnp.einsum(
+        "ecd,edf->ecf", disp, ew["w_up"]
+    )
+    out["w_down"] = hidden  # (E, C, ff)
+    if "shared" in p:
+        out["shared/w_up"] = out["shared/w_gate"] = xf
+        sh = jax.nn.silu(xf @ p["shared"]["w_gate"]) * (xf @ p["shared"]["w_up"])
+        out["shared/w_down"] = sh
+    return out
+
+
+def ssm_taps(bp, cfg, h, positions=None, **aux):
+    out: Dict[str, jax.Array] = {}
+    Bsz, S, d = h.shape
+    H, P, N = cfg.ssm_num_heads, cfg.ssm_head_dim, cfg.ssm_state
+    u = L.apply_norm(bp["ln"], h, cfg.norm)
+    out["in_z"] = out["in_x"] = out["in_B"] = out["in_C"] = out["in_dt"] = _flat(u)
+    z = jnp.einsum("bsd,dhp->bshp", u, bp["in_z"])
+    x = jnp.einsum("bsd,dhp->bshp", u, bp["in_x"])
+    Bm = u @ bp["in_B"]
+    Cm = u @ bp["in_C"]
+    dt_raw = jnp.einsum("bsd,dh->bsh", u, bp["in_dt"])
+    xbc = jnp.concatenate([x.reshape(Bsz, S, H * P), Bm, Cm], axis=-1)
+    out["conv_w"] = _flat(xbc)  # (T, ch): conv taps share channel stats
+    xbc, _ = SSM.causal_conv(xbc, bp["conv_w"], bp["conv_b"])
+    x = xbc[..., : H * P].reshape(Bsz, S, H, P)
+    Bm = xbc[..., H * P : H * P + N]
+    Cm = xbc[..., H * P + N :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + bp["dt_bias"])
+    A = -jnp.exp(bp["A_log"])
+    y, _ = SSM.ssd_chunked(x, dt, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + bp["D"].astype(y.dtype)[None, None, :, None] * x
+    yf = y.reshape(Bsz, S, H * P) * jax.nn.silu(z.reshape(Bsz, S, H * P))
+    yf = L.rms_norm(yf, bp["gnorm"]["w"])
+    out["out"] = yf  # (B, S, H*P) -> flattened below
+    out["out"] = _flat(yf)
+    return out
+
+
+def encdec_dec_taps(bp, cfg, h, positions, memory=None, **aux):
+    out: Dict[str, jax.Array] = {}
+    h = _attn_taps(bp, cfg, h, positions, out)
+    # cross attention
+    x_in = L.apply_norm(bp["ln_x"], h, cfg.norm)
+    out["xattn/wq"] = _flat(x_in)
+    out["xattn/wk"] = out["xattn/wv"] = _flat(memory)
+    q, _, _ = L.qkv_proj(bp["xattn"], x_in)
+    mk = jnp.einsum("bsd,dhk->bshk", memory, bp["xattn"]["wk"])
+    mv = jnp.einsum("bsd,dhk->bshk", memory, bp["xattn"]["wv"])
+    o = L.attend(q, mk, mv, causal=False, impl=cfg.attn_impl, chunk=cfg.attn_chunk)
+    out["xattn/wo"] = o.reshape(-1, o.shape[-2] * o.shape[-1])
+    h = h + L.out_proj(bp["xattn"], o)
+    mlp_in = L.apply_norm(bp["ln2"], h, cfg.norm)
+    _mlp_taps(bp["mlp"], cfg, mlp_in, out, cfg.mlp_act)
+    return out
+
+
+def encdec_enc_taps(bp, cfg, h, positions, **aux):
+    out: Dict[str, jax.Array] = {}
+    attn_in = L.apply_norm(bp["ln1"], h, cfg.norm)
+    out["wq"] = out["wk"] = out["wv"] = _flat(attn_in)
+    q, k, v = L.qkv_proj(bp["attn"], attn_in)
+    o = L.attend(q, k, v, causal=False, impl=cfg.attn_impl, chunk=cfg.attn_chunk)
+    out["wo"] = o.reshape(-1, o.shape[-2] * o.shape[-1])
+    h = h + L.out_proj(bp["attn"], o)
+    mlp_in = L.apply_norm(bp["ln2"], h, cfg.norm)
+    _mlp_taps(bp["mlp"], cfg, mlp_in, out, cfg.mlp_act)
+    return out
+
+
+def taps_for_block(cfg: ModelConfig, block_index: int, num_blocks: int) -> Callable:
+    """Dispatch: which tap function applies to block ``block_index``."""
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        return dense_taps
+    if fam == "moe":
+        return moe_taps
+    if fam == "ssm":
+        return ssm_taps
+    if fam == "hybrid":
+        # last index is the shared attention block (model.py convention)
+        if block_index == num_blocks - 1:
+            return dense_taps
+        return ssm_taps
+    if fam == "encdec":
+        if block_index < cfg.enc_layers:
+            return encdec_enc_taps
+        return encdec_dec_taps
+    raise ValueError(fam)

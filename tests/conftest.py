@@ -1,0 +1,75 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests run on the 1 real CPU
+device; only the dry-run (launch/dryrun.py) forces 512 placeholder devices,
+and the distribution tests that need >1 device spawn subprocesses."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.tokens import (
+    CorpusConfig, SyntheticCorpus, calibration_set, corpus_iterator, eval_set,
+)
+from repro.models.model import build
+from repro.optim.optimizers import adamw
+from repro.training.train_loop import make_train_step
+
+TINY_ARCHS = [
+    "tiny_dense", "tiny_moe", "tiny_ssm", "tiny_hybrid", "tiny_encdec", "tiny_vlm",
+]
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: multi-device subprocess / long-running integration tests",
+    )
+
+
+def make_batch(model, shape, rng: np.random.Generator):
+    """Random batch matching input_specs (tokens int32 < vocab, floats ~N)."""
+    specs = model.input_specs(shape)
+    batch = {}
+    for k, v in specs.items():
+        if jnp.issubdtype(v.dtype, jnp.integer):
+            batch[k] = jnp.asarray(
+                rng.integers(0, model.cfg.vocab_size, size=v.shape), v.dtype
+            )
+        else:
+            batch[k] = jnp.asarray(rng.normal(size=v.shape)).astype(v.dtype)
+    return batch
+
+
+@pytest.fixture(scope="session")
+def tiny_corpus():
+    return SyntheticCorpus(CorpusConfig(vocab_size=get_config("tiny_dense").vocab_size))
+
+
+@pytest.fixture(scope="session")
+def trained_tiny_dense(tiny_corpus):
+    """A briefly-pretrained tiny dense LM — the 'dense teacher' for the
+    pruning/EBFT integration tests (session-scoped: trained once)."""
+    cfg = get_config("tiny_dense")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw(3e-3)
+    step = jax.jit(make_train_step(model.loss, opt))
+    opt_state = opt.init(params)
+    it = corpus_iterator(tiny_corpus, batch=32, seq_len=128, seed=1)
+    for _ in range(150):
+        params, opt_state, _, _ = step(
+            params, opt_state, {"tokens": jnp.asarray(next(it))}, None
+        )
+    return model, params
+
+
+@pytest.fixture(scope="session")
+def tiny_calib(tiny_corpus):
+    return calibration_set(tiny_corpus, 32, 128)
+
+
+@pytest.fixture(scope="session")
+def tiny_eval(tiny_corpus):
+    return eval_set(tiny_corpus, 16, 128)

@@ -1,0 +1,95 @@
+"""Zero-padded head expansion must be EXACTLY the same function (the
+distribution-layer claim behind launch/steps.padded_heads)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.distributed.head_padding import head_pad_mask, pad_attention_params
+from repro.launch.steps import padded_heads
+from repro.models.model import build
+
+
+def _compare(cfg_old, cfg_new):
+    m_old = build(cfg_old)
+    m_new = build(cfg_new)
+    params = m_old.init(jax.random.PRNGKey(0))
+    padded = pad_attention_params(params, cfg_old, cfg_new)
+    # shapes must match the padded model
+    ref_shapes = jax.eval_shape(lambda: m_new.init(jax.random.PRNGKey(0)))
+    for (pa, a), (pb, b) in zip(
+        jax.tree_util.tree_flatten_with_path(padded)[0],
+        jax.tree_util.tree_flatten_with_path(ref_shapes)[0],
+    ):
+        assert a.shape == b.shape, (pa, a.shape, b.shape)
+
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg_old.vocab_size, (2, 24)), jnp.int32)
+    out_old = m_old.forward(params, {"tokens": toks})
+    out_new = m_new.forward(padded, {"tokens": toks})
+    np.testing.assert_allclose(
+        np.asarray(out_old), np.asarray(out_new), rtol=1e-5, atol=1e-5
+    )
+    return params, padded
+
+
+def test_mha_padding_exact():
+    base = get_config("tiny_dense")
+    cfg_old = base.replace(num_heads=3, num_kv_heads=3, head_dim=16)
+    cfg_new = cfg_old.replace(num_heads=4, num_kv_heads=4)
+    _compare(cfg_old, cfg_new)
+
+
+def test_gqa_padding_exact():
+    base = get_config("tiny_dense")
+    cfg_old = base.replace(num_heads=6, num_kv_heads=2, head_dim=16)
+    cfg_new = cfg_old.replace(num_heads=8, num_kv_heads=2)  # group 3 -> 4
+    _compare(cfg_old, cfg_new)
+
+
+def test_head_pad_mask_freezes_pads():
+    base = get_config("tiny_dense")
+    cfg_old = base.replace(num_heads=6, num_kv_heads=2, head_dim=16)
+    cfg_new = cfg_old.replace(num_heads=8, num_kv_heads=2)
+    m_new = build(cfg_new)
+    params = build(cfg_old).init(jax.random.PRNGKey(0))
+    padded = pad_attention_params(params, cfg_old, cfg_new)
+    mask = head_pad_mask(padded, cfg_old, cfg_new)
+
+    # one masked SGD step keeps padded slots exactly zero
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg_old.vocab_size, (2, 16)), jnp.int32)
+
+    def loss(p):
+        return m_new.loss(p, {"tokens": toks})[0]
+
+    g = jax.grad(loss)(padded)
+    g = jax.tree.map(lambda gr, mk: gr * mk.astype(gr.dtype), g, mask)
+    stepped = jax.tree.map(lambda p, gr: p - 0.1 * gr, padded, g)
+
+    wq = np.asarray(stepped["blocks"]["attn"]["wq"])  # (L, d, 8, hd)
+    grouped = wq.reshape(wq.shape[0], wq.shape[1], 2, 4, wq.shape[-1])
+    assert np.all(grouped[:, :, :, 3:, :] == 0.0), "padded q heads moved"
+    wo = np.asarray(stepped["blocks"]["attn"]["wo"])  # (L, 8, hd, d)
+    wog = wo.reshape(wo.shape[0], 2, 4, *wo.shape[2:])
+    assert np.all(wog[:, :, 3:] == 0.0), "padded wo rows moved"
+
+    # and WITHOUT the mask wo's pad rows WOULD move (their grad is the
+    # uniform-softmax context x dy, which is nonzero — the mask is
+    # load-bearing)
+    unmasked = jax.tree.map(lambda p, gr: p - 0.1 * gr, padded, jax.grad(loss)(padded))
+    wo2 = np.asarray(unmasked["blocks"]["attn"]["wo"])
+    wog2 = wo2.reshape(wo.shape[0], 2, 4, *wo.shape[2:])
+    assert not np.all(wog2[:, :, 3:] == 0.0)
+
+
+def test_padded_heads_policy():
+    """The launcher's padded-head table for the assigned archs on 16."""
+    assert padded_heads(get_config("qwen1_5_4b"), 16) == (32, 32)      # MHA 20
+    assert padded_heads(get_config("qwen2_5_32b"), 16) == (48, 8)      # GQA 40/8
+    assert padded_heads(get_config("qwen1_5_110b"), 16) == (64, 8)     # already ok
+    assert padded_heads(get_config("nemotron_4_15b"), 16) == (48, 8)
+    assert padded_heads(get_config("llava_next_mistral_7b"), 16) == (32, 8)

@@ -1,0 +1,122 @@
+"""The static HLO analyzer that powers the roofline (launch/hlo_analysis):
+exactness on compiled programs + parser unit tests on HLO text fixtures."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_analysis as HA
+
+
+def test_scan_trip_count_weighting_exact():
+    """cost_analysis counts scan bodies once; the analyzer must multiply
+    by the trip count exactly."""
+    def f(x, w):
+        def body(h, _):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, None, length=10)
+        return h
+
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    c = jax.jit(f).lower(x, w).compile()
+    st = HA.analyze(c.as_text(), 1)
+    assert st.dot_flops == pytest.approx(10 * 2 * 128 * 256 * 256, rel=1e-6)
+
+
+def test_nested_scan_multiplies():
+    def f(x, w):
+        def outer(h, _):
+            def inner(h2, _):
+                return jnp.tanh(h2 @ w), None
+            h2, _ = jax.lax.scan(inner, h, None, length=3)
+            return h2, None
+        h, _ = jax.lax.scan(outer, x, None, length=5)
+        return h
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    c = jax.jit(f).lower(x, w).compile()
+    st = HA.analyze(c.as_text(), 1)
+    assert st.dot_flops == pytest.approx(15 * 2 * 64 * 64 * 64, rel=1e-6)
+
+
+def test_grad_of_scan_counts_fwd_and_bwd():
+    def loss(x, w):
+        def body(h, _):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, None, length=4)
+        return jnp.sum(h)
+
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    w = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    c = jax.jit(jax.grad(loss, argnums=1)).lower(x, w).compile()
+    st = HA.analyze(c.as_text(), 1)
+    fwd = 4 * 2 * 32 * 32 * 32
+    # backward adds ~2x the forward dots (dL/dh and dL/dw per step)
+    assert st.dot_flops >= 2.5 * fwd
+
+
+def test_shape_bytes_tuple_and_layout():
+    assert HA.shape_bytes("f32[4,8]{1,0}") == 128
+    assert HA.shape_bytes("bf16[10]") == 20
+    assert HA.shape_bytes("(f32[2,2]{1,0}, s32[3])") == 28
+    assert HA.shape_bytes("pred[7]") == 7
+    assert HA.shape_bytes("f32[]") == 4
+
+
+FIXTURE = """HloModule test
+
+%add.clone (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %a = f32[] add(%x, %y)
+}
+
+ENTRY %main (p0: f32[16,64]) -> f32[16,64] {
+  %p0 = f32[16,64]{1,0} parameter(0)
+  %ar = f32[16,64]{1,0} all-reduce(%p0), channel_id=1, replica_groups=[4,8]<=[32], to_apply=%add.clone
+  %ag = f32[16,64]{1,0} all-gather(%ar), channel_id=2, replica_groups={{0,1,2,3}}, dimensions={0}
+  ROOT %cp = f32[16,64]{1,0} collective-permute(%ag), channel_id=3, source_target_pairs={{0,1},{1,0}}
+}
+"""
+
+
+def test_collective_parsing_from_fixture():
+    st = HA.analyze(FIXTURE, 32)
+    size = 16 * 64 * 4
+    # all-reduce over groups of 8: 2*(7/8)*size
+    # all-gather groups of 4: (3/4)*size ; permute: size
+    expect = int(2 * (7 / 8) * size) + int((3 / 4) * size) + size
+    assert st.collective_wire == pytest.approx(expect)
+    assert st.by_collective["all-reduce"] == pytest.approx(int(2 * (7 / 8) * size))
+    assert set(st.by_group_size) == {8, 4, 32}
+
+
+def test_group_size_formats():
+    ins = HA.Instruction("x", "f32[4]", "all-reduce", [],
+                         "replica_groups=[16,16]<=[256]")
+    assert HA.group_size(ins, 256) == 16
+    ins2 = HA.Instruction("x", "f32[4]", "all-reduce", [],
+                          "replica_groups={{0,1,2},{3,4,5}}")
+    assert HA.group_size(ins2, 256) == 3
+    ins3 = HA.Instruction("x", "f32[4]", "all-reduce", [], "no groups")
+    assert HA.group_size(ins3, 256) == 256
+
+
+def test_dot_flops_from_named_operands():
+    comps = HA.parse_module(
+        """HloModule m
+
+ENTRY %main (a: f32[8,32], b: f32[32,16]) -> f32[8,16] {
+  %a = f32[8,32]{1,0} parameter(0)
+  %b = f32[32,16]{1,0} parameter(1)
+  ROOT %d = f32[8,16]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+    )
+    main = comps["main"]
+    dot = [i for i in main.instructions if i.op == "dot"][0]
+    assert HA.dot_flops(dot, main.shapes) == 2 * 8 * 16 * 32

@@ -1,0 +1,127 @@
+"""Optimizer / schedule / gradient-compression unit tests."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import grad_compress as GC
+from repro.optim.optimizers import (
+    adam, adamw, apply_updates, clip_by_global_norm, sgd,
+)
+from repro.optim.schedules import (
+    constant, linear_decay, plateau_early_stop, warmup_cosine,
+)
+
+SET = settings(max_examples=20, deadline=None, derandomize=True)
+
+
+def test_adam_first_step_matches_analytic():
+    """After one step from zero moments, Adam's update is -lr * sign-ish:
+    m_hat = g, v_hat = g^2 -> update = -lr * g / (|g| + eps)."""
+    lr = 1e-2
+    opt = adam(lr)
+    params = {"w": jnp.asarray([1.0, -2.0, 3.0])}
+    g = {"w": jnp.asarray([0.5, -0.25, 2.0])}
+    state = opt.init(params)
+    upd, state = opt.update(g, state, params)
+    expect = -lr * np.sign([0.5, -0.25, 2.0])
+    np.testing.assert_allclose(np.asarray(upd["w"]), expect, rtol=1e-4)
+
+
+def test_adamw_decouples_weight_decay():
+    lr, wd = 1e-2, 0.1
+    opt = adamw(lr, weight_decay=wd)
+    params = {"w": jnp.asarray([2.0])}
+    g = {"w": jnp.asarray([0.0])}
+    state = opt.init(params)
+    upd, _ = opt.update(g, state, params)
+    # zero grad -> update is pure decay: -lr * wd * w
+    np.testing.assert_allclose(np.asarray(upd["w"]), [-lr * wd * 2.0], rtol=1e-5)
+
+
+def test_sgd_momentum_accumulates():
+    opt = sgd(1.0, momentum=0.5)
+    params = {"w": jnp.zeros(1)}
+    state = opt.init(params)
+    g = {"w": jnp.asarray([1.0])}
+    u1, state = opt.update(g, state, params)
+    u2, state = opt.update(g, state, params)
+    assert float(u2["w"][0]) < float(u1["w"][0]) < 0  # |u2| = 1.5 > |u1| = 1
+
+
+def test_apply_updates_adds():
+    p = {"w": jnp.asarray([1.0])}
+    u = {"w": jnp.asarray([-0.25])}
+    np.testing.assert_allclose(np.asarray(apply_updates(p, u)["w"]), [0.75])
+
+
+@SET
+@given(st.integers(0, 2**31 - 1), st.floats(0.1, 10.0))
+def test_clip_by_global_norm(seed, clip):
+    rng = np.random.default_rng(seed)
+    g = {"a": jnp.asarray(rng.normal(size=(7,)).astype(np.float32)),
+         "b": jnp.asarray(rng.normal(size=(3, 2)).astype(np.float32))}
+    clipped, norm = clip_by_global_norm(g, clip)
+    total = np.sqrt(sum(float(jnp.sum(x ** 2)) for x in jax.tree.leaves(clipped)))
+    assert total <= clip * 1.001
+    if float(norm) <= clip:  # no-op when under the threshold
+        for a, b in zip(jax.tree.leaves(g), jax.tree.leaves(clipped)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_warmup_cosine_shape():
+    f = warmup_cosine(1.0, warmup=10, total=100)
+    assert float(f(0)) == 0.0
+    assert abs(float(f(10)) - 1.0) < 1e-6
+    assert float(f(5)) == pytest.approx(0.5, rel=1e-5)
+    assert float(f(100)) < 1e-3
+    # monotone decay after warmup
+    vals = [float(f(s)) for s in range(10, 101, 10)]
+    assert all(a >= b for a, b in zip(vals, vals[1:]))
+
+
+def test_linear_decay_endpoints():
+    f = linear_decay(2.0, warmup=0, total=10, floor=0.5)
+    assert float(f(0)) == pytest.approx(2.0)
+    assert float(f(10)) == pytest.approx(0.5)
+
+
+def test_plateau_early_stop():
+    assert not plateau_early_stop([1.0, 0.5], patience=2)
+    # recent best (0.4998) improves on prior best (0.5) by <0.1% -> plateau
+    assert plateau_early_stop([1.0, 0.5, 0.4999, 0.4998], patience=2, rel_tol=1e-3)
+    assert not plateau_early_stop([1.0, 0.5, 0.4, 0.3], patience=2, rel_tol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+@SET
+@given(st.integers(0, 2**31 - 1), st.sampled_from([0.05, 0.1, 0.5]))
+def test_compression_error_feedback_conserves_signal(seed, ratio):
+    """sent + residual == grad + old residual (nothing is lost)."""
+    rng = np.random.default_rng(seed)
+    g = {"w": jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32))}
+    err = {"w": jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32) * 0.1)}
+    sent, new_err = GC.compress(g, err, ratio)
+    lhs = np.asarray(sent["w"], np.float32) + np.asarray(new_err["w"])
+    rhs = np.asarray(g["w"], np.float32) + np.asarray(err["w"])
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-5, atol=1e-5)
+    # sparsity of the sent tensor ~ ratio
+    nz = float((np.asarray(sent["w"]) != 0).mean())
+    assert nz <= ratio * 1.5 + 1e-3
+
+
+def test_compression_skips_tiny_leaves():
+    g = {"w": jnp.ones((4,))}
+    err = {"w": jnp.zeros((4,))}
+    sent, new_err = GC.compress(g, err, 0.01)
+    np.testing.assert_array_equal(np.asarray(sent["w"]), np.ones(4))
+
+
+def test_compressed_bytes_estimate():
+    params = {"w": jnp.zeros((1024, 64))}
+    full = GC.compressed_bytes(params, 1.0)
+    tenth = GC.compressed_bytes(params, 0.1)
+    assert tenth < full

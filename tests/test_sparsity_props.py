@@ -1,0 +1,175 @@
+"""Property-based tests (hypothesis) on the sparsity-layer invariants."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sparsity import sparse_params as SP
+
+SET = settings(max_examples=25, deadline=None, derandomize=True)
+
+
+@st.composite
+def matrices(draw, max_r=16, max_o=12):
+    r = draw(st.integers(2, max_r))
+    o = draw(st.integers(1, max_o))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(r, o)).astype(np.float32))
+
+
+@st.composite
+def nm_matrices(draw):
+    m = draw(st.sampled_from([2, 4, 8]))
+    n = draw(st.integers(1, m - 1))
+    groups = draw(st.integers(1, 8))
+    o = draw(st.integers(1, 12))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(groups * m, o)).astype(np.float32))
+    return w, n, m
+
+
+# ---------------------------------------------------------------------------
+@SET
+@given(matrices(), st.floats(0.0, 0.95))
+def test_topk_mask_rows_sparsity(scores, sparsity):
+    mask = SP.topk_mask_rows(scores, sparsity)
+    R = scores.shape[0]
+    keep = max(1, int(round(R * (1.0 - sparsity))))
+    per_col = np.asarray(mask).sum(axis=0)
+    assert np.all(per_col == keep)
+
+
+@SET
+@given(matrices(), st.floats(0.0, 0.95))
+def test_global_topk_keeps_highest(scores, sparsity):
+    mask = np.asarray(SP.global_topk_mask(scores, sparsity))
+    s = np.asarray(scores)
+    if mask.min() == 1.0:
+        return
+    kept_min = s[mask == 1].min()
+    dropped_max = s[mask == 0].max()
+    assert kept_min >= dropped_max
+
+
+@SET
+@given(nm_matrices())
+def test_nm_mask_exact_group_counts(wm):
+    w, n, m = wm
+    mask = np.asarray(SP.nm_mask(w, n, m))
+    R, O = mask.shape
+    groups = mask.reshape(R // m, m, O).sum(axis=1)
+    assert np.all(groups == n)
+
+
+@SET
+@given(nm_matrices())
+def test_nm_compress_decompress_roundtrip(wm):
+    w, n, m = wm
+    mask = SP.nm_mask(w, n, m)
+    vals, idx = SP.nm_compress(w * mask, mask, n, m)
+    back = SP.nm_decompress(vals, idx, n, m)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(w * mask))
+    # idx must address within groups
+    assert np.asarray(idx).min() >= 0 and np.asarray(idx).max() < m
+
+
+@SET
+@given(nm_matrices())
+def test_nm_mask_keeps_largest_per_group(wm):
+    w, n, m = wm
+    scores = jnp.abs(w)
+    mask = np.asarray(SP.nm_mask(scores, n, m))
+    s = np.asarray(scores)
+    R, O = s.shape
+    sg = s.reshape(R // m, m, O)
+    mg = mask.reshape(R // m, m, O)
+    for g in range(R // m):
+        for o in range(O):
+            kept = sg[g, mg[g, :, o] == 1, o]
+            dropped = sg[g, mg[g, :, o] == 0, o]
+            if len(dropped):
+                assert kept.min() >= dropped.max() - 1e-6
+
+
+# ---------------------------------------------------------------------------
+@SET
+@given(st.integers(0, 2**31 - 1), st.floats(0.1, 0.9))
+def test_apply_masks_idempotent_and_grad_mask_consistent(seed, sparsity):
+    rng = np.random.default_rng(seed)
+    params = {
+        "blocks": {
+            "attn": {"wq": jnp.asarray(rng.normal(size=(8, 4, 2)).astype(np.float32))},
+            "mlp": {"w_up": jnp.asarray(rng.normal(size=(8, 16)).astype(np.float32))},
+            "ln": {"w": jnp.ones((8,), jnp.float32)},
+        }
+    }
+    masks = jax.tree_util.tree_map_with_path(
+        lambda path, p: (
+            SP.from_matrix(
+                SP.topk_mask_rows(jnp.abs(SP.to_matrix(SP._path_names(path)[-1], p)[0]), sparsity),
+                SP.to_matrix(SP._path_names(path)[-1], p)[1],
+            )
+            if SP.is_prunable(path, p)
+            else jnp.ones((), jnp.float32)
+        ),
+        params,
+    )
+    once = SP.apply_masks(params, masks)
+    twice = SP.apply_masks(once, masks)
+    for a, b in zip(jax.tree.leaves(once), jax.tree.leaves(twice)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # gradient masking zeroes exactly the pruned slots
+    grads = jax.tree.map(jnp.ones_like, params)
+    mg = SP.mask_gradients(grads, masks)
+    wq = np.asarray(mg["blocks"]["attn"]["wq"])
+    mk = np.asarray(masks["blocks"]["attn"]["wq"])
+    assert np.all(wq[mk == 0] == 0) and np.all(wq[mk == 1] == 1)
+
+
+def test_to_from_matrix_roundtrip_all_names():
+    rng = np.random.default_rng(0)
+    shapes = {
+        "wq": (6, 4, 2), "wk": (6, 2, 2), "wv": (6, 2, 2), "wo": (4, 2, 6),
+        "w_up": (6, 8), "w_gate": (6, 8), "w_down": (8, 6),
+        "in_z": (6, 2, 3), "in_x": (6, 2, 3), "in_B": (6, 4), "in_C": (6, 4),
+        "in_dt": (6, 2), "out": (2, 3, 6), "conv_w": (4, 10),
+    }
+    for name, shape in shapes.items():
+        leaf = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+        mat, tag = SP.to_matrix(name, leaf)
+        assert mat.ndim == 2
+        back = SP.from_matrix(mat, tag)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(leaf))
+
+
+def test_expert_batched_view():
+    leaf = jnp.zeros((5, 6, 7))  # (E, d, ff)
+    mat, tag = SP.to_matrix("w_up", leaf)
+    assert mat.shape == (5, 6, 7) and tag[0] == "expert"
+
+
+def test_is_prunable_respects_protected_parents():
+    import jax.tree_util as jtu
+
+    tree = {
+        "embed": {"tok": jnp.zeros((10, 4))},
+        "router": {"w": jnp.zeros((4, 8))},
+        "attn": {"wq": jnp.zeros((4, 2, 2))},
+        "head": {"w": jnp.zeros((4, 10))},
+    }
+    flags = {}
+
+    def g(path, leaf):
+        flags["/".join(SP._path_names(path))] = SP.is_prunable(path, leaf)
+        return leaf
+
+    jtu.tree_map_with_path(g, tree)
+    assert flags["attn/wq"]
+    assert not flags["embed/tok"]
+    assert not flags["router/w"]
+    assert not flags["head/w"]
