@@ -1,0 +1,99 @@
+"""repro.analysis — static invariant checkers for the EBFT repro.
+
+Four passes, one report (``python -m repro.analysis``; docs/ANALYSIS.md):
+
+  * ``kernels``  — Pallas tile divisibility / VMEM budget / BlockSpec
+    arity, against the same :mod:`repro.kernels.validation` plans the
+    kernels execute (KER0xx);
+  * ``masks``    — taint-based proof that ``reconstruction.block_loss``
+    masks every prunable weight before any contraction, plus concrete
+    N:M mask-pytree validation (MSK0xx);
+  * ``jaxpr``    — lint of the traced EBFT tune step and serving decode
+    step: silent widenings, host syncs, convert round-trips (LNT0xx);
+  * ``sharding`` — config arithmetic + PartitionSpec-vs-mesh validation,
+    and HLO collective/trip-count checks when HLO text is supplied
+    (CFG0xx / SHD0xx / HLO0xx).
+
+Findings carry stable codes and severities (error/warn/info); the CLI
+exit code is governed by ``--fail-on`` and individual codes can be
+silenced with ``--ignore CODE``.
+"""
+from __future__ import annotations
+
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+from repro.analysis.findings import SEVERITIES, Finding, Report
+from repro.analysis.passes import PASSES
+from repro.configs import ARCH_IDS, EXTRA_IDS, get_config
+from repro.configs.base import ModelConfig
+
+PASS_NAMES = tuple(PASSES)  # ("kernels", "masks", "jaxpr", "sharding")
+
+__all__ = [
+    "Finding", "Report", "SEVERITIES", "PASS_NAMES",
+    "resolve_configs", "run",
+]
+
+
+def resolve_configs(
+    names: Optional[Sequence[str]] = None,
+) -> List[Tuple[str, ModelConfig, ModelConfig]]:
+    """(name, real CONFIG, SMOKE variant) triples for the requested config
+    names (default: every registered config)."""
+    if not names:
+        names = list(ARCH_IDS) + list(EXTRA_IDS)
+    out = []
+    for name in names:
+        try:
+            out.append((name, get_config(name), get_config(name, smoke=True)))
+        except ModuleNotFoundError:
+            raise ValueError(
+                f"unknown config {name!r}; available: "
+                + ", ".join(ARCH_IDS + EXTRA_IDS)
+            ) from None
+    return out
+
+
+def run(
+    config_names: Optional[Sequence[str]] = None,
+    passes: Optional[Sequence[str]] = None,
+    extra_configs: Optional[Iterable[Tuple[str, ModelConfig]]] = None,
+    hlo_dir: Optional[str] = None,
+    total_devices: int = 256,
+    progress=None,
+) -> Report:
+    """Run the requested passes over the requested configs.
+
+    ``extra_configs`` injects (name, cfg) pairs not in the registry (the
+    cfg doubles as its own smoke variant — keep injected configs small).
+    ``progress`` is an optional ``callable(str)`` for per-config status.
+    """
+    selected = list(passes) if passes else list(PASS_NAMES)
+    for p in selected:
+        if p not in PASSES:
+            raise ValueError(f"unknown pass {p!r}; available: {PASS_NAMES}")
+
+    triples = resolve_configs(config_names)
+    if extra_configs:
+        triples += [(name, cfg, cfg) for name, cfg in extra_configs]
+
+    report = Report(passes_run=selected,
+                    configs_checked=[t[0] for t in triples])
+    for name, cfg, smoke in triples:
+        for pname in selected:
+            if progress:
+                progress(f"{pname:<9} {name}")
+            try:
+                report.add(PASSES[pname](name, cfg, smoke))
+            except Exception as e:  # a crashed pass is itself a finding
+                report.add([Finding(
+                    code="ANA000", severity="error", pass_name=pname,
+                    config=name, location="internal",
+                    message=f"pass crashed: {type(e).__name__}: {e}",
+                )])
+
+    if hlo_dir and "sharding" in selected:
+        from repro.analysis.config_check import check_hlo_dir
+
+        report.add(check_hlo_dir(hlo_dir, total_devices))
+    return report

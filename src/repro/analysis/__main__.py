@@ -1,0 +1,99 @@
+"""CLI: ``python -m repro.analysis [options]``.
+
+Runs the static-analysis passes over every registered config (or a
+subset) and prints severity-ranked findings — human text by default,
+``--json`` for machines. Exit code is 1 when any finding reaches the
+``--fail-on`` severity (default: error), so shipped configs gate CI.
+
+Examples::
+
+    python -m repro.analysis                       # everything
+    python -m repro.analysis --configs llama_7b --passes kernels masks
+    python -m repro.analysis --json --fail-on warn --ignore SHD004
+    python -m repro.analysis --extra-config-module my_bad_configs
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+
+from repro.analysis import PASS_NAMES, run
+from repro.configs import ARCH_IDS, EXTRA_IDS
+
+
+def _load_extra(module_name: str):
+    """Import ``module_name`` and return its ``ANALYSIS_CONFIGS`` list of
+    (name, ModelConfig) pairs — the hook tests use to seed violations."""
+    mod = importlib.import_module(module_name)
+    pairs = getattr(mod, "ANALYSIS_CONFIGS", None)
+    if pairs is None:
+        raise SystemExit(
+            f"--extra-config-module: {module_name} has no ANALYSIS_CONFIGS"
+        )
+    return list(pairs)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static invariant checks for kernels, masks, jaxprs, "
+                    "and sharding (docs/ANALYSIS.md).",
+    )
+    ap.add_argument("--configs", nargs="*", default=None,
+                    metavar="NAME",
+                    help=f"config subset (default: all — "
+                         f"{', '.join(ARCH_IDS + EXTRA_IDS)})")
+    ap.add_argument("--passes", nargs="*", default=None, choices=PASS_NAMES,
+                    help="pass subset (default: all four)")
+    ap.add_argument("--fail-on", default="error",
+                    choices=("error", "warn", "info", "never"),
+                    help="minimum severity that makes the exit code "
+                         "non-zero (default: error)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit machine-readable JSON instead of text")
+    ap.add_argument("--ignore", action="append", default=[], metavar="CODE",
+                    help="silence a finding code (repeatable), e.g. "
+                         "--ignore SHD004")
+    ap.add_argument("--hlo-dir", default=None, metavar="DIR",
+                    help="directory of post-SPMD HLO text dumps "
+                         "(*.txt / *.hlo) for the HLO0xx checks")
+    ap.add_argument("--total-devices", type=int, default=256,
+                    help="device count the HLO dumps were compiled for "
+                         "(default: 256 = 16x16 mesh)")
+    ap.add_argument("--extra-config-module", default=None, metavar="MODULE",
+                    help="import MODULE and also check its ANALYSIS_CONFIGS "
+                         "[(name, ModelConfig), ...]")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="suppress per-config progress on stderr")
+    args = ap.parse_args(argv)
+
+    extra = _load_extra(args.extra_config_module) if args.extra_config_module else None
+    progress = None
+    if not args.quiet and not args.json:
+        progress = lambda s: print(f"  ... {s}", file=sys.stderr)  # noqa: E731
+
+    t0 = time.monotonic()
+    try:
+        report = run(
+            config_names=args.configs,
+            passes=args.passes,
+            extra_configs=extra,
+            hlo_dir=args.hlo_dir,
+            total_devices=args.total_devices,
+            progress=progress,
+        ).without(args.ignore)
+    except ValueError as e:
+        ap.error(str(e))
+
+    if args.json:
+        print(report.to_json())
+    else:
+        print(report.to_text())
+        print(f"-- analysis took {time.monotonic() - t0:.1f}s")
+    return report.exit_code(args.fail_on)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,190 @@
+"""Pass 4 — config arithmetic and sharding validation.
+
+Checks the pure config math first (CFG0xx: the `d_model % n_heads == 0`
+family of invariants), then runs the real sharding rules
+(``distributed.sharding.param_pspecs``) against the production
+AbstractMeshes and re-verifies every emitted PartitionSpec leaf-by-leaf
+(SHD0xx) — axes must exist in the mesh and divide their dimension, the
+contract a 7B dry-run would otherwise discover 30 minutes in.
+
+Where post-SPMD HLO text is available (``--hlo-dir``), it is parsed with
+``launch.hlo_analysis`` and collective replica groups / while trip counts
+are validated too (HLO0xx).
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional
+
+import jax
+
+from repro.analysis.findings import Finding
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding as SH
+from repro.launch import hlo_analysis as HA
+from repro.launch.mesh import abstract_production_mesh
+
+
+def check_model_config(name: str, cfg: ModelConfig) -> List[Finding]:
+    findings: List[Finding] = []
+
+    def err(code, msg):
+        findings.append(Finding(
+            code=code, severity="error", pass_name="sharding",
+            config=name, location="config", message=msg,
+        ))
+
+    if cfg.head_dim == 0 and cfg.num_heads > 0 and cfg.d_model % cfg.num_heads != 0:
+        err("CFG001", f"d_model={cfg.d_model} not divisible by "
+                      f"num_heads={cfg.num_heads} (and head_dim unset)")
+    if cfg.num_kv_heads > 0 and cfg.num_heads % cfg.num_kv_heads != 0:
+        err("CFG002", f"num_heads={cfg.num_heads} not divisible by "
+                      f"num_kv_heads={cfg.num_kv_heads} (GQA grouping broken)")
+    if cfg.family == "moe":
+        if cfg.moe_top_k > cfg.moe_num_experts:
+            err("CFG003", f"moe_top_k={cfg.moe_top_k} exceeds "
+                          f"moe_num_experts={cfg.moe_num_experts}")
+        if cfg.moe_d_ff <= 0:
+            err("CFG003", "moe family requires moe_d_ff > 0")
+        if cfg.moe_first_dense >= cfg.num_layers:
+            err("CFG003", f"moe_first_dense={cfg.moe_first_dense} leaves no "
+                          f"MoE layers (num_layers={cfg.num_layers})")
+    if cfg.family in ("ssm", "hybrid"):
+        if cfg.ssm_state <= 0:
+            err("CFG004", f"{cfg.family} family requires ssm_state > 0")
+        elif cfg.ssm_d_inner % cfg.ssm_head_dim != 0:
+            err("CFG004", f"ssm_d_inner={cfg.ssm_d_inner} not divisible by "
+                          f"ssm_head_dim={cfg.ssm_head_dim}")
+    if cfg.family == "hybrid" and cfg.hybrid_attn_every <= 0:
+        err("CFG005", "hybrid family requires hybrid_attn_every > 0")
+    if cfg.family == "encdec" and cfg.enc_layers <= 0:
+        err("CFG006", "encdec family requires enc_layers > 0")
+    if cfg.vocab_size <= 0 or cfg.d_model <= 0 or cfg.num_layers <= 0:
+        err("CFG007", "vocab_size, d_model, num_layers must be positive")
+    return findings
+
+
+# ---------------------------------------------------------------------------
+def check_sharding(
+    name: str, cfg: ModelConfig, *, multi_pod: bool = False
+) -> List[Finding]:
+    """Run the real sharding rules on the real parameter shapes and verify
+    the emitted specs against the production mesh."""
+    from repro.models.model import build
+
+    findings: List[Finding] = []
+    mesh = abstract_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    try:
+        model = build(cfg)
+        shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    except Exception as e:  # config too broken to even build
+        findings.append(Finding(
+            code="SHD000", severity="error", pass_name="sharding",
+            config=name, location="build",
+            message=f"model build/eval_shape failed: {e}",
+        ))
+        return findings
+
+    specs = SH.param_pspecs(shapes, mesh, fsdp=False)
+    axis_names = set(mesh.axis_names)
+
+    def visit(path, leaf, spec):
+        loc = "/".join(SH._path_names(path))
+        for d, ax in enumerate(spec):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = 1
+            for a in axes:
+                if a not in axis_names:
+                    findings.append(Finding(
+                        code="SHD001", severity="error", pass_name="sharding",
+                        config=name, location=f"{loc}[{d}]",
+                        message=f"PartitionSpec axis {a!r} not in mesh "
+                                f"{mesh_name} {sorted(axis_names)}",
+                    ))
+                size *= SH.mesh_axis_size(mesh, a)
+            if size > 1 and leaf.shape[d] % size != 0:
+                findings.append(Finding(
+                    code="SHD002", severity="error", pass_name="sharding",
+                    config=name, location=f"{loc}[{d}]",
+                    message=f"dim {leaf.shape[d]} not divisible by mesh "
+                            f"extent {size} ({ax})",
+                ))
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, shapes, specs)
+
+    msize = SH.mesh_axis_size(mesh, SH.MODEL_AXIS)
+    if cfg.num_heads > 0 and cfg.num_heads % msize != 0:
+        findings.append(Finding(
+            code="SHD003", severity="warn", pass_name="sharding",
+            config=name, location="attention",
+            message=f"num_heads={cfg.num_heads} not divisible by model "
+                    f"axis {msize}: falls back to zero-padded head "
+                    "expansion (launch/steps.py pad_q_heads)",
+        ))
+    if 0 < cfg.num_kv_heads < msize:
+        findings.append(Finding(
+            code="SHD004", severity="info", pass_name="sharding",
+            config=name, location="attention",
+            message=f"num_kv_heads={cfg.num_kv_heads} < model axis {msize}: "
+                    "KV projections replicate (standard Megatron GQA fallback)",
+        ))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+def check_hlo_text(
+    text: str, total_devices: int, *, source: str = "hlo"
+) -> List[Finding]:
+    """Validate post-SPMD HLO text with the hlo_analysis parser: replica
+    groups must tile the device count, while loops should have recoverable
+    trip counts (otherwise roofline totals silently undercount)."""
+    findings: List[Finding] = []
+    comps = HA.parse_module(text)
+    for cname, comp in comps.items():
+        for ins in comp.instructions:
+            if any(ins.op.startswith(c) for c in HA._COLLECTIVES):
+                g = HA.group_size(ins, total_devices)
+                if g <= 0 or total_devices % g != 0:
+                    findings.append(Finding(
+                        code="HLO002", severity="error", pass_name="sharding",
+                        location=f"{source}:{cname}/{ins.name}",
+                        message=f"collective group size {g} does not tile "
+                                f"{total_devices} devices",
+                    ))
+            if ins.op == "while":
+                trip = 0
+                mt = HA._KNOWN_TRIP.search(ins.line)
+                if mt:
+                    trip = int(mt.group(1))
+                else:
+                    mc = HA._COND.search(ins.line)
+                    if mc and mc.group(1) in comps:
+                        t = HA._trip_from_condition(comps[mc.group(1)])
+                        trip = t if t > 1 else 0
+                if trip == 0:
+                    findings.append(Finding(
+                        code="HLO001", severity="warn", pass_name="sharding",
+                        location=f"{source}:{cname}/{ins.name}",
+                        message="while loop with unrecoverable trip count — "
+                                "roofline totals will undercount this loop",
+                    ))
+    return findings
+
+
+def check_hlo_dir(hlo_dir: str, total_devices: int = 256) -> List[Finding]:
+    import glob
+    import os
+
+    findings: List[Finding] = []
+    for path in sorted(
+        glob.glob(os.path.join(hlo_dir, "*.txt"))
+        + glob.glob(os.path.join(hlo_dir, "*.hlo"))
+    ):
+        with open(path) as f:
+            findings += check_hlo_text(
+                f.read(), total_devices, source=os.path.basename(path)
+            )
+    return findings

@@ -1,0 +1,198 @@
+"""Pass 1 — Pallas kernel launch validation, statically, per config.
+
+For every config in ``repro.configs`` this derives the matmul / attention
+problem shapes its blocks would launch (EBFT tuning uses 8 microbatches of
+1024-token calibration segments -> M = 8192 tokens; serving adds the
+decode shapes), builds the SAME :class:`~repro.kernels.validation.KernelPlan`
+the kernels execute, and reports:
+
+  * KER001 (error) tile does not divide the (clamped) problem shape — the
+    kernel would raise at call time, 30 minutes into a calibration run;
+  * KER002 (error) per-grid-step VMEM footprint (double-buffered streamed
+    blocks + scratch) exceeds the ~16 MiB budget;
+  * KER003 (error) BlockSpec index-map arity != grid rank;
+  * KER004 (info)  VMEM footprint above 50% of budget (no headroom for
+    compiler-allocated temporaries);
+  * KER005 (warn)  N:M compression not applicable (reduction dim not a
+    multiple of M) — the dense masked_matmul path still works.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from repro.analysis.findings import Finding
+from repro.configs.base import ModelConfig
+from repro.kernels.validation import (
+    VMEM_BUDGET_BYTES,
+    pick_tile,
+    plan_flash_attention,
+    plan_masked_matmul,
+    plan_nm_spmm,
+)
+
+# EBFT calibration: microbatch of 8 x 1024-token C4 segments (core/ebft.py)
+_TUNE_TOKENS = 8 * 1024
+
+
+def matmul_workloads(cfg: ModelConfig) -> List[Tuple[str, int, int, int]]:
+    """(label, M, K, N) for every distinct weight matmul a block launches."""
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    M = _TUNE_TOKENS
+    out: List[Tuple[str, int, int, int]] = []
+
+    has_attention = cfg.family != "ssm"
+    if has_attention:
+        out += [
+            ("wq", M, d, H * hd),
+            ("wk", M, d, KV * hd),
+            ("wv", M, d, KV * hd),
+            ("wo", M, H * hd, d),
+        ]
+    if cfg.family == "moe":
+        ff = cfg.moe_d_ff
+        out += [("expert_up", M, d, ff), ("expert_down", M, ff, d)]
+        if cfg.moe_first_dense > 0 and cfg.d_ff > 0:
+            out += [("w_up", M, d, cfg.d_ff), ("w_down", M, cfg.d_ff, d)]
+    elif cfg.family in ("ssm", "hybrid"):
+        di = cfg.ssm_d_inner
+        out += [("in_z", M, d, di), ("in_x", M, d, di), ("ssm_out", M, di, d)]
+        if cfg.family == "hybrid" and cfg.d_ff > 0:
+            out += [("w_up", M, d, cfg.d_ff), ("w_down", M, cfg.d_ff, d)]
+    elif cfg.d_ff > 0:
+        out += [("w_up", M, d, cfg.d_ff), ("w_down", M, cfg.d_ff, d)]
+    return out
+
+
+def attention_workloads(cfg: ModelConfig) -> List[Tuple[str, int, int, int]]:
+    """(label, Sq, Sk, head_dim) per assigned shape with attention."""
+    if cfg.family == "ssm":
+        return []
+    hd = cfg.resolved_head_dim
+    out = []
+    for s in cfg.shapes():
+        if s.kind == "decode":
+            out.append((f"flash/{s.name}", 1, s.seq_len, hd))
+        else:
+            out.append((f"flash/{s.name}", s.seq_len, s.seq_len, hd))
+    return out
+
+
+# ---------------------------------------------------------------------------
+def _vmem_findings(plan, config: str, location: str) -> List[Finding]:
+    findings: List[Finding] = []
+    used = plan.vmem_bytes()
+    if used > VMEM_BUDGET_BYTES:
+        findings.append(Finding(
+            code="KER002", severity="error", pass_name="kernels",
+            config=config, location=location,
+            message=(
+                f"per-grid-step VMEM {used / 2**20:.1f} MiB exceeds the "
+                f"{VMEM_BUDGET_BYTES / 2**20:.0f} MiB budget "
+                f"(tiles {plan.tiles})"
+            ),
+        ))
+    elif used > VMEM_BUDGET_BYTES // 2:
+        findings.append(Finding(
+            code="KER004", severity="info", pass_name="kernels",
+            config=config, location=location,
+            message=(
+                f"per-grid-step VMEM {used / 2**20:.1f} MiB is above 50% of "
+                "budget — little headroom for compiler temporaries"
+            ),
+        ))
+    for err in plan.index_map_arity_errors():
+        findings.append(Finding(
+            code="KER003", severity="error", pass_name="kernels",
+            config=config, location=location, message=err,
+        ))
+    return findings
+
+
+def check_config_kernels(
+    name: str,
+    cfg: ModelConfig,
+    *,
+    nm: Tuple[int, int] = (2, 4),
+    tiles: Tuple[int, int, int] = (128, 128, 128),
+) -> List[Finding]:
+    findings: List[Finding] = []
+    bm, bk, bn = tiles
+    n, m = nm
+
+    for label, M, K, N in matmul_workloads(cfg):
+        # model the tile selection a real launch performs: preferred tile
+        # if it divides, else power-of-two halvings — KER001 when the
+        # dimension admits no viable tile at all.
+        tm, tk, tn = pick_tile(M, bm), pick_tile(K, bk), pick_tile(N, bn)
+        bad = [(d, v) for d, v, t in (("M", M, tm), ("K", K, tk), ("N", N, tn))
+               if t is None]
+        if bad:
+            findings.append(Finding(
+                code="KER001", severity="error", pass_name="kernels",
+                config=name, location=f"masked_matmul/{label}",
+                message="; ".join(
+                    f"no tile in {{{bm},...,8}} divides {d}={v}" for d, v in bad
+                ),
+            ))
+            continue
+        try:
+            plan = plan_masked_matmul(M, K, N, bm=tm, bk=tk, bn=tn)
+        except ValueError as e:
+            findings.append(Finding(
+                code="KER001", severity="error", pass_name="kernels",
+                config=name, location=f"masked_matmul/{label}",
+                message=str(e),
+            ))
+            continue
+        findings += _vmem_findings(plan, name, f"masked_matmul/{label}")
+
+        if K % m != 0:
+            findings.append(Finding(
+                code="KER005", severity="warn", pass_name="kernels",
+                config=name, location=f"nm_spmm/{label}",
+                message=(
+                    f"reduction dim K={K} not divisible by M={m}; "
+                    f"{n}:{m} compression unavailable for this matmul"
+                ),
+            ))
+            continue
+        tkg = pick_tile(K, bk, multiple_of=m)
+        if tkg is None:
+            findings.append(Finding(
+                code="KER001", severity="error", pass_name="kernels",
+                config=name, location=f"nm_spmm/{label}",
+                message=f"no {m}-aligned tile in {{{bk},...,8}} divides K={K}",
+            ))
+            continue
+        try:
+            nplan = plan_nm_spmm(M, K, N, n=n, m=m, bm=tm, bk=tkg, bn=tn)
+        except ValueError as e:
+            findings.append(Finding(
+                code="KER001", severity="error", pass_name="kernels",
+                config=name, location=f"nm_spmm/{label}", message=str(e),
+            ))
+            continue
+        findings += _vmem_findings(nplan, name, f"nm_spmm/{label}")
+
+    for label, Sq, Sk, hd in attention_workloads(cfg):
+        tq, tk2 = pick_tile(Sq, bm), pick_tile(Sk, bk)
+        if tq is None or tk2 is None:
+            findings.append(Finding(
+                code="KER001", severity="error", pass_name="kernels",
+                config=name, location=label,
+                message=f"no tile in {{{bm},...,8}} divides "
+                        f"Sq={Sq} / Sk={Sk}",
+            ))
+            continue
+        try:
+            fplan = plan_flash_attention(1, Sq, Sk, hd, bq=tq, bk=tk2)
+        except ValueError as e:
+            findings.append(Finding(
+                code="KER001", severity="error", pass_name="kernels",
+                config=name, location=label, message=str(e),
+            ))
+            continue
+        findings += _vmem_findings(fplan, name, label)
+
+    return findings

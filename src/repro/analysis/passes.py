@@ -1,0 +1,181 @@
+"""Pass drivers: wire the four checkers to real configs/models.
+
+The kernel and sharding passes run on the **exact assigned config numbers**
+(pure shape math + ``eval_shape``, no compute). The mask and jaxpr passes
+need a traced graph, so they trace each config's SMOKE variant — same
+family, same code path, tiny shapes — which keeps the full suite well
+under the 60 s CPU budget (docs/ANALYSIS.md).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.config_check import check_model_config, check_sharding
+from repro.analysis.findings import Finding
+from repro.analysis.jaxpr_lint import lint_jaxpr
+from repro.analysis.kernel_check import check_config_kernels
+from repro.analysis.mask_check import check_mask_tree, check_masked_fn
+from repro.configs.base import ModelConfig
+from repro.core import reconstruction as R
+from repro.optim.optimizers import adam, apply_updates
+from repro.sparsity import sparse_params as SP
+
+# one traced model per distinct smoke config — many archs alias tiny_*
+_MODEL_CACHE: Dict[str, Tuple] = {}
+
+
+def _smoke_model(smoke_cfg: ModelConfig):
+    key = smoke_cfg.name
+    if key not in _MODEL_CACHE:
+        from repro.models.model import build
+
+        model = build(smoke_cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        _MODEL_CACHE[key] = (model, params)
+    return _MODEL_CACHE[key]
+
+
+def _block_indices(model) -> List[int]:
+    """Block 0 plus one representative of each *other* block kind (MoE
+    expert block, hybrid shared-attention block, encdec decoder block)."""
+    cfg = model.cfg
+    idx = [0]
+    if cfg.family == "moe" and cfg.moe_first_dense > 0:
+        idx.append(cfg.moe_first_dense)
+    if cfg.family == "hybrid":
+        idx.append(model.num_blocks - 1)
+    if cfg.family == "encdec":
+        idx.append(cfg.enc_layers)
+    return idx
+
+
+def _block_io(model, i: int, B: int = 2, S: int = 8):
+    cfg = model.cfg
+    dt = jnp.dtype(cfg.dtype)
+    h = jnp.zeros((B, S, cfg.d_model), dt)
+    pos = jnp.arange(S)[None, :]
+    aux = {}
+    if cfg.family == "encdec" and i >= cfg.enc_layers:
+        aux = {"memory": jnp.zeros((B, S, cfg.d_model), dt)}
+    return h, pos, aux
+
+
+# ---------------------------------------------------------------------------
+def run_kernel_pass(name: str, cfg: ModelConfig, smoke: ModelConfig) -> List[Finding]:
+    return check_config_kernels(name, cfg)
+
+
+def run_sharding_pass(name: str, cfg: ModelConfig, smoke: ModelConfig) -> List[Finding]:
+    findings = check_model_config(name, cfg)
+    if not any(f.severity == "error" for f in findings):
+        findings += check_sharding(name, cfg, multi_pod=False)
+    return findings
+
+
+def run_mask_pass(name: str, cfg: ModelConfig, smoke: ModelConfig) -> List[Finding]:
+    """Prove Eq.-4 mask dominance on the traced block_loss of every block
+    kind, then validate a concrete N:M mask pytree for one block."""
+    findings: List[Finding] = []
+    model, params = _smoke_model(smoke)
+
+    for i in _block_indices(model):
+        bw = model.get_block(params, i)
+        masks_b = SP.ones_masks(bw)
+        h, pos, aux = _block_io(model, i)
+
+        def loss(bw_, masks_, h_, pos_, i=i, aux=aux):
+            return R.block_loss(model, i, bw_, masks_, h_, h_, pos_, aux)
+
+        try:
+            findings += check_masked_fn(
+                loss, bw, masks_b, h, pos,
+                where=f"block_loss[{R.block_kind(model, i)}]", config=name,
+            )
+        except Exception as e:
+            findings.append(Finding(
+                code="MSK000", severity="warn", pass_name="masks",
+                config=name, location=f"block{i}",
+                message=f"could not trace block_loss: {e}",
+            ))
+
+    # concrete-pattern validation: build a 2:4 mask for block 0 and check it
+    bw = model.get_block(params, 0)
+
+    def make_mask(path, leaf):
+        if SP.is_prunable(path, leaf):
+            nm_name = SP._path_names(path)[-1]
+            mat, tag = SP.to_matrix(nm_name, jnp.abs(leaf))
+            if mat.shape[-2] % 4 == 0:
+                return SP.from_matrix(SP.nm_mask(mat, 2, 4), tag)
+            return jnp.ones(leaf.shape, jnp.float32)
+        return jnp.ones((), jnp.float32)
+
+    masks_b = jax.tree_util.tree_map_with_path(make_mask, bw)
+    nm_ok = jax.tree_util.tree_map_with_path(
+        lambda p, l: (not SP.is_prunable(p, l))
+        or SP.to_matrix(SP._path_names(p)[-1], l)[0].shape[-2] % 4 == 0,
+        bw,
+    )
+    if all(jax.tree_util.tree_leaves(nm_ok)):
+        findings += check_mask_tree(masks_b, bw, nm=(2, 4), config=name)
+    else:
+        findings += check_mask_tree(masks_b, bw, nm=None, config=name)
+    return findings
+
+
+def run_jaxpr_pass(name: str, cfg: ModelConfig, smoke: ModelConfig) -> List[Finding]:
+    """Lint the EBFT tune step (value_and_grad + Adam update) and the
+    serving decode step of the smoke model."""
+    findings: List[Finding] = []
+    model, params = _smoke_model(smoke)
+
+    # --- tune step (the ebft.tune_block inner step) -----------------------
+    i = 0
+    bw = model.get_block(params, i)
+    masks_b = SP.ones_masks(bw)
+    h, pos, aux = _block_io(model, i)
+    opt = adam(2e-4)
+    opt_state = opt.init(bw)
+
+    def tune_step(bw_, opt_state_, masks_, h_, target_, pos_):
+        def loss_fn(b):
+            return R.block_loss(model, i, b, masks_, h_, target_, pos_, aux)
+
+        loss, g = jax.value_and_grad(loss_fn)(bw_)
+        upd, new_state = opt.update(g, opt_state_, bw_)
+        return apply_updates(bw_, upd), new_state, loss
+
+    try:
+        closed = jax.make_jaxpr(tune_step)(bw, opt_state, masks_b, h, h, pos)
+        findings += lint_jaxpr(closed, where="ebft.tune_step", config=name)
+    except Exception as e:
+        findings.append(Finding(
+            code="LNT000", severity="warn", pass_name="jaxpr",
+            config=name, location="ebft.tune_step",
+            message=f"could not trace tune step: {e}",
+        ))
+
+    # --- serving decode step ---------------------------------------------
+    try:
+        state = model.init_serve_state(2, 16)
+        tok = jnp.zeros((2, 1), jnp.int32)
+        closed = jax.make_jaxpr(model.decode_step)(params, tok, state)
+        findings += lint_jaxpr(closed, where="serving.decode_step", config=name)
+    except Exception as e:
+        findings.append(Finding(
+            code="LNT000", severity="warn", pass_name="jaxpr",
+            config=name, location="serving.decode_step",
+            message=f"could not trace decode step: {e}",
+        ))
+    return findings
+
+
+PASSES = {
+    "kernels": run_kernel_pass,
+    "masks": run_mask_pass,
+    "jaxpr": run_jaxpr_pass,
+    "sharding": run_sharding_pass,
+}

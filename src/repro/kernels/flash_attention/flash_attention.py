@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.validation import plan_flash_attention
+
 _NEG = -1e30
 
 
@@ -92,24 +94,33 @@ def flash_attention(
     interpret: bool = False,
 ) -> jax.Array:
     BH, Sq, d = q.shape
+    if k.shape[0] != BH or v.shape != k.shape or k.shape[2] != d:
+        raise ValueError(
+            f"flash_attention: inconsistent operand shapes q={q.shape} "
+            f"k={k.shape} v={v.shape}"
+        )
     _, Sk, _ = k.shape
-    bq, bk = min(bq, Sq), min(bk, Sk)
-    assert Sq % bq == 0 and Sk % bk == 0, (q.shape, k.shape, bq, bk)
-    k_steps = Sk // bk
+    # validates tile divisibility (after clamping) and is the exact plan
+    # repro.analysis checks statically
+    plan = plan_flash_attention(BH, Sq, Sk, d, bq=bq, bk=bk, q_dtype=q.dtype)
+    bq, bk = plan.tiles["bq"], plan.tiles["bk"]
+    k_steps = plan.grid[2]
     scale = 1.0 / math.sqrt(d)
+    qb, kb, vb = plan.inputs
+    (ob,) = plan.outputs
 
     return pl.pallas_call(
         functools.partial(
             _kernel, scale=scale, causal=causal, bq=bq, bk=bk,
             k_steps=k_steps, q_offset=q_offset,
         ),
-        grid=(BH, Sq // bq, k_steps),
+        grid=plan.grid,
         in_specs=[
-            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec(qb.shape, qb.index_map),
+            pl.BlockSpec(kb.shape, kb.index_map),
+            pl.BlockSpec(vb.shape, vb.index_map),
         ],
-        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_specs=pl.BlockSpec(ob.shape, ob.index_map),
         out_shape=jax.ShapeDtypeStruct((BH, Sq, d), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((bq, 1), jnp.float32),

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.validation import plan_masked_matmul
+
 
 def _kernel(x_ref, w_ref, m_ref, o_ref, acc_ref, *, k_steps: int):
     @pl.when(pl.program_id(2) == 0)
@@ -56,23 +58,30 @@ def masked_matmul(
 ) -> jax.Array:
     M, K = x.shape
     K2, N = w.shape
-    assert K == K2 and m.shape == (K, N), (x.shape, w.shape, m.shape)
-    bm, bk, bn = min(bm, M), min(bk, K), min(bn, N)
-    assert M % bm == 0 and K % bk == 0 and N % bn == 0, (
-        f"shape ({M},{K},{N}) not divisible by tiles ({bm},{bk},{bn})"
+    if K != K2 or m.shape != (K, N):
+        raise ValueError(
+            f"masked_matmul: inconsistent operand shapes x={x.shape} "
+            f"w={w.shape} m={m.shape} (want x=(M,K), w=m=(K,N))"
+        )
+    # validates tile divisibility (after clamping to the problem shape) and
+    # is the exact plan repro.analysis checks statically
+    plan = plan_masked_matmul(
+        M, K, N, bm=bm, bk=bk, bn=bn, x_dtype=x.dtype, w_dtype=w.dtype
     )
-    k_steps = K // bk
+    k_steps = plan.grid[2]
+    xb, wb, mb = plan.inputs
+    (ob,) = plan.outputs
 
     return pl.pallas_call(
         functools.partial(_kernel, k_steps=k_steps),
-        grid=(M // bm, N // bn, k_steps),
+        grid=plan.grid,
         in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
-            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec(xb.shape, xb.index_map),
+            pl.BlockSpec(wb.shape, wb.index_map),
+            pl.BlockSpec(mb.shape, mb.index_map),
         ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_specs=pl.BlockSpec(ob.shape, ob.index_map),
         out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM(ob.shape, jnp.float32)],
         interpret=interpret,
     )(x, w, m.astype(jnp.int8))

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.validation import plan_nm_spmm
+
 
 def _kernel(x_ref, v_ref, i_ref, o_ref, acc_ref, *, n: int, m: int, k_steps: int):
     @pl.when(pl.program_id(2) == 0)
@@ -71,23 +73,31 @@ def nm_spmm(
 ) -> jax.Array:
     M, K = x.shape
     KC, N = vals.shape
-    assert KC * m == K * n, (x.shape, vals.shape, (n, m))
-    bm, bk, bn = min(bm, M), min(bk, K), min(bn, N)
-    assert bk % m == 0, f"bk={bk} must align with M-groups of {m}"
-    assert M % bm == 0 and K % bk == 0 and N % bn == 0
-    k_steps = K // bk
-    bkc = bk // m * n  # compressed rows per K tile
+    if KC * m != K * n:
+        raise ValueError(
+            f"nm_spmm: compressed rows {KC} inconsistent with K={K} under "
+            f"{n}:{m} (want K//m*n = {K // m * n})"
+        )
+    # validates group alignment + tile divisibility (after clamping) and is
+    # the exact plan repro.analysis checks statically
+    plan = plan_nm_spmm(
+        M, K, N, n=n, m=m, bm=bm, bk=bk, bn=bn,
+        x_dtype=x.dtype, v_dtype=vals.dtype,
+    )
+    k_steps = plan.grid[2]
+    xb, vb, ib = plan.inputs
+    (ob,) = plan.outputs
 
     return pl.pallas_call(
         functools.partial(_kernel, n=n, m=m, k_steps=k_steps),
-        grid=(M // bm, N // bn, k_steps),
+        grid=plan.grid,
         in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bkc, bn), lambda i, j, k: (k, j)),
-            pl.BlockSpec((bkc, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec(xb.shape, xb.index_map),
+            pl.BlockSpec(vb.shape, vb.index_map),
+            pl.BlockSpec(ib.shape, ib.index_map),
         ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_specs=pl.BlockSpec(ob.shape, ob.index_map),
         out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM(ob.shape, jnp.float32)],
         interpret=interpret,
     )(x, vals, idx.astype(jnp.int8))

@@ -1,0 +1,239 @@
+"""Shared shape/tile validation and static kernel plans.
+
+Every Pallas kernel in this package validates its launch through the
+helpers here, raising ``ValueError`` (``assert`` disappears under
+``python -O``). The same helpers back the static analyzer
+(``repro.analysis.kernel_check``): the plan a kernel executes is the plan
+the analyzer checks, so CI findings and runtime errors can never drift
+apart (docs/ANALYSIS.md).
+
+A :class:`KernelPlan` is the static footprint of one ``pl.pallas_call``:
+the grid, every BlockSpec (shape + index map), and the scratch buffers.
+From it the analyzer derives
+
+  * tile divisibility (already enforced — building a plan validates),
+  * a per-grid-step VMEM estimate: streamed blocks are double-buffered by
+    the Pallas pipeline (2x), scratch is resident once, against the
+    ~16 MiB per-core VMEM budget (DESIGN.md §3),
+  * BlockSpec index-map arity vs. grid rank consistency.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+from typing import Callable, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+# Per-core VMEM on current TPU generations (v4/v5e/v5p: ~16 MiB usable).
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024
+
+
+def clamp_tiles(dims: Dict[str, int], tiles: Dict[str, int]) -> Dict[str, int]:
+    """Clamp each requested tile to its dimension (a 128-default tile on a
+    64-wide problem simply becomes 64). Returns the clamped tile dict."""
+    return {t: min(tiles[t], dims[t]) for t in tiles}
+
+
+def pick_tile(
+    dim: int, preferred: int = 128, minimum: int = 8, multiple_of: int = 1
+) -> Optional[int]:
+    """Largest viable tile for ``dim``: the preferred size if it divides,
+    else halvings of it down to ``minimum`` (MXU/VPU lanes want powers of
+    two), else ``dim`` itself when the whole dimension fits in one tile.
+    ``multiple_of`` constrains candidates (nm_spmm tiles must align with
+    M-groups). Returns ``None`` when no viable tile exists — the static
+    analyzer reports that as KER001 rather than guessing."""
+    if dim <= 0:
+        return None
+    if dim <= preferred:
+        return dim if dim % multiple_of == 0 else None
+    t = preferred
+    while t >= minimum:
+        if dim % t == 0 and t % multiple_of == 0:
+            return t
+        t //= 2
+    return None
+
+
+def require_divisible(
+    kernel: str,
+    dims: Dict[str, int],
+    requested: Dict[str, int],
+    clamped: Dict[str, int],
+) -> None:
+    """Raise ``ValueError`` for every dimension its (clamped) tile does not
+    divide, reporting both the requested and the effective tile so the
+    clamp-then-check behaviour is visible in the message."""
+    bad = []
+    for t, dim_name in zip(requested, dims):
+        dim, tile = dims[dim_name], clamped[t]
+        if tile <= 0 or dim % tile != 0:
+            note = (
+                f"{dim_name}={dim} not divisible by {t}={tile}"
+                + (f" (requested {t}={requested[t]}, clamped to {tile})"
+                   if requested[t] != tile else "")
+            )
+            bad.append(note)
+    if bad:
+        raise ValueError(f"{kernel}: " + "; ".join(bad))
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockUse:
+    """One VMEM-resident buffer of a kernel: a streamed input/output block
+    (with its BlockSpec index map) or a scratch allocation (index_map None)."""
+
+    name: str
+    shape: Tuple[int, ...]
+    dtype: jnp.dtype
+    index_map: Optional[Callable] = None
+
+    @property
+    def bytes(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n * jnp.dtype(self.dtype).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPlan:
+    kernel: str
+    grid: Tuple[int, ...]
+    inputs: Tuple[BlockUse, ...]
+    outputs: Tuple[BlockUse, ...]
+    scratch: Tuple[BlockUse, ...]
+    tiles: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def vmem_bytes(self) -> int:
+        """Streamed blocks double-buffer (pipeline prefetch), scratch is
+        resident once."""
+        streamed = sum(b.bytes for b in self.inputs + self.outputs)
+        return 2 * streamed + sum(b.bytes for b in self.scratch)
+
+    def index_map_arity_errors(self) -> Tuple[str, ...]:
+        """BlockSpec index maps must take exactly one argument per grid
+        axis — a mismatch is a latent pallas_call failure."""
+        errs = []
+        rank = len(self.grid)
+        for b in self.inputs + self.outputs:
+            if b.index_map is None:
+                continue
+            arity = len(inspect.signature(b.index_map).parameters)
+            if arity != rank:
+                errs.append(
+                    f"{self.kernel}/{b.name}: index map takes {arity} args "
+                    f"but grid has rank {rank}"
+                )
+        return tuple(errs)
+
+
+# ---------------------------------------------------------------------------
+# per-kernel plans (each kernel builds its pallas_call FROM its plan)
+# ---------------------------------------------------------------------------
+def plan_masked_matmul(
+    M: int, K: int, N: int,
+    *,
+    bm: int = 128, bk: int = 128, bn: int = 128,
+    x_dtype=jnp.float32, w_dtype=jnp.float32,
+) -> KernelPlan:
+    dims = {"M": M, "K": K, "N": N}
+    req = {"bm": bm, "bk": bk, "bn": bn}
+    tiles = clamp_tiles({"bm": M, "bk": K, "bn": N}, req)
+    require_divisible("masked_matmul", dims, req, tiles)
+    bm, bk, bn = tiles["bm"], tiles["bk"], tiles["bn"]
+    grid = (M // bm, N // bn, K // bk)
+    return KernelPlan(
+        kernel="masked_matmul",
+        grid=grid,
+        inputs=(
+            BlockUse("x", (bm, bk), jnp.dtype(x_dtype), lambda i, j, k: (i, k)),
+            BlockUse("w", (bk, bn), jnp.dtype(w_dtype), lambda i, j, k: (k, j)),
+            BlockUse("m", (bk, bn), jnp.dtype(jnp.int8), lambda i, j, k: (k, j)),
+        ),
+        outputs=(
+            BlockUse("out", (bm, bn), jnp.dtype(x_dtype), lambda i, j, k: (i, j)),
+        ),
+        scratch=(BlockUse("acc", (bm, bn), jnp.dtype(jnp.float32)),),
+        tiles=tiles,
+    )
+
+
+def plan_nm_spmm(
+    M: int, K: int, N: int,
+    *,
+    n: int, m: int,
+    bm: int = 128, bk: int = 128, bn: int = 128,
+    x_dtype=jnp.float32, v_dtype=jnp.float32,
+) -> KernelPlan:
+    if not (0 < n <= m):
+        raise ValueError(f"nm_spmm: invalid N:M pattern {n}:{m}")
+    if K % m != 0:
+        raise ValueError(f"nm_spmm: K={K} not divisible by M-group size m={m}")
+    dims = {"M": M, "K": K, "N": N}
+    req = {"bm": bm, "bk": bk, "bn": bn}
+    tiles = clamp_tiles({"bm": M, "bk": K, "bn": N}, req)
+    require_divisible("nm_spmm", dims, req, tiles)
+    bm, bk, bn = tiles["bm"], tiles["bk"], tiles["bn"]
+    if bk % m != 0:
+        raise ValueError(
+            f"nm_spmm: bk={bk} must align with M-groups of {m}"
+            + (f" (requested bk={req['bk']}, clamped to {bk})"
+               if req["bk"] != bk else "")
+        )
+    grid = (M // bm, N // bn, K // bk)
+    bkc = bk // m * n  # compressed rows per K tile
+    return KernelPlan(
+        kernel="nm_spmm",
+        grid=grid,
+        inputs=(
+            BlockUse("x", (bm, bk), jnp.dtype(x_dtype), lambda i, j, k: (i, k)),
+            BlockUse("vals", (bkc, bn), jnp.dtype(v_dtype), lambda i, j, k: (k, j)),
+            BlockUse("idx", (bkc, bn), jnp.dtype(jnp.int8), lambda i, j, k: (k, j)),
+        ),
+        outputs=(
+            BlockUse("out", (bm, bn), jnp.dtype(x_dtype), lambda i, j, k: (i, j)),
+        ),
+        scratch=(
+            BlockUse("acc", (bm, bn), jnp.dtype(jnp.float32)),
+            # the decompressed dense tile is VMEM-register resident too
+            BlockUse("dense_tile", (bk, bn), jnp.dtype(v_dtype)),
+        ),
+        tiles=tiles,
+    )
+
+
+def plan_flash_attention(
+    BH: int, Sq: int, Sk: int, d: int,
+    *,
+    bq: int = 128, bk: int = 128,
+    q_dtype=jnp.float32,
+) -> KernelPlan:
+    dims = {"Sq": Sq, "Sk": Sk}
+    req = {"bq": bq, "bk": bk}
+    tiles = clamp_tiles({"bq": Sq, "bk": Sk}, req)
+    require_divisible("flash_attention", dims, req, tiles)
+    bq, bk = tiles["bq"], tiles["bk"]
+    grid = (BH, Sq // bq, Sk // bk)
+    dt = jnp.dtype(q_dtype)
+    return KernelPlan(
+        kernel="flash_attention",
+        grid=grid,
+        inputs=(
+            BlockUse("q", (1, bq, d), dt, lambda b, i, j: (b, i, 0)),
+            BlockUse("k", (1, bk, d), dt, lambda b, i, j: (b, j, 0)),
+            BlockUse("v", (1, bk, d), dt, lambda b, i, j: (b, j, 0)),
+        ),
+        outputs=(
+            BlockUse("out", (1, bq, d), dt, lambda b, i, j: (b, i, 0)),
+        ),
+        scratch=(
+            BlockUse("m", (bq, 1), jnp.dtype(jnp.float32)),
+            BlockUse("l", (bq, 1), jnp.dtype(jnp.float32)),
+            BlockUse("acc", (bq, d), jnp.dtype(jnp.float32)),
+            # the (bq, bk) score/probability tile is VMEM-register resident
+            BlockUse("scores", (bq, bk), jnp.dtype(jnp.float32)),
+        ),
+        tiles=tiles,
+    )

@@ -24,3 +24,25 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_debug_mesh(data: int = 1, model: int = 1):
     """Tiny mesh for CPU tests (requires <= available devices)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_abstract_mesh(shape, axis_names):
+    """Device-free mesh for sharding-rule checks (tests, repro.analysis).
+
+    The ``AbstractMesh`` constructor changed across jax releases:
+    newer versions take ``(axis_sizes, axis_names)``, 0.4.x takes a single
+    ``((name, size), ...)`` tuple. Try the new form first.
+    """
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(shape), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, shape)))
+
+
+def abstract_production_mesh(*, multi_pod: bool = False):
+    """AbstractMesh twin of ``make_production_mesh`` (no devices needed)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return make_abstract_mesh(shape, axes)

@@ -1,0 +1,28 @@
+"""Seeded-violation configs for the static analyzer's own tests.
+
+Loaded by ``python -m repro.analysis --extra-config-module analysis_fixtures``
+(and by tests/test_analysis.py directly). Each config plants one specific
+error-severity violation the analyzer must catch:
+
+* ``bad_tiles`` — d_ff=999 (odd, >128): no power-of-two tile divides the
+  MLP matmul's reduction/output dims -> KER001;
+* ``bad_heads`` — num_heads=5 with num_kv_heads=2: GQA grouping broken
+  -> CFG002.
+
+Kept tiny so they double as their own smoke variants for the trace passes.
+"""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+
+BAD_TILES = ModelConfig(
+    name="bad_tiles", family="dense", num_layers=2, d_model=64,
+    num_heads=4, num_kv_heads=4, d_ff=999, vocab_size=256,
+)
+
+BAD_HEADS = ModelConfig(
+    name="bad_heads", family="dense", num_layers=2, d_model=64,
+    num_heads=5, num_kv_heads=2, d_ff=128, vocab_size=256, head_dim=16,
+)
+
+ANALYSIS_CONFIGS = [("bad_tiles", BAD_TILES), ("bad_heads", BAD_HEADS)]

@@ -1,0 +1,378 @@
+"""repro.analysis: one positive (seeded violation caught) and one negative
+(clean input stays clean) test per pass, plus CLI exit-code behaviour."""
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from analysis_fixtures import BAD_HEADS, BAD_TILES
+from repro.analysis import Finding, Report, run
+from repro.analysis.config_check import (
+    check_hlo_text,
+    check_model_config,
+    check_sharding,
+)
+from repro.analysis.jaxpr_lint import lint_jaxpr
+from repro.analysis.kernel_check import check_config_kernels, matmul_workloads
+from repro.analysis.mask_check import check_mask_tree, check_masked_fn
+from repro.configs import get_config
+from repro.kernels.validation import (
+    BlockUse,
+    KernelPlan,
+    pick_tile,
+    plan_masked_matmul,
+)
+from repro.sparsity import sparse_params as SP
+
+
+def codes(findings):
+    return {f.code for f in findings}
+
+
+def errors(findings):
+    return [f for f in findings if f.severity == "error"]
+
+
+# ---------------------------------------------------------------------------
+# findings / report plumbing
+# ---------------------------------------------------------------------------
+def test_report_exit_code_thresholds():
+    r = Report(findings=[
+        Finding("X001", "warn", "kernels", "w"),
+        Finding("X002", "info", "kernels", "i"),
+    ])
+    assert r.exit_code("error") == 0
+    assert r.exit_code("warn") == 1
+    assert r.exit_code("info") == 1
+    assert r.exit_code("never") == 0
+    assert r.max_severity() == "warn"
+
+
+def test_report_ignore_filters_codes():
+    r = Report(findings=[
+        Finding("X001", "error", "kernels", "e"),
+        Finding("X002", "warn", "kernels", "w"),
+    ])
+    assert r.without(["X001"]).exit_code("error") == 0
+    assert r.without([]).exit_code("error") == 1
+
+
+def test_finding_rejects_bad_severity():
+    with pytest.raises(ValueError):
+        Finding("X", "fatal", "kernels", "msg")
+
+
+# ---------------------------------------------------------------------------
+# pass 1: kernels
+# ---------------------------------------------------------------------------
+def test_pick_tile_selection():
+    assert pick_tile(8192, 128) == 128
+    assert pick_tile(10944, 128) == 64      # deepseek_moe_16b's d_ff
+    assert pick_tile(64, 128) == 64         # clamp: whole dim in one tile
+    assert pick_tile(999, 128) is None      # odd, >128: no viable tile
+    assert pick_tile(10944, 128, multiple_of=4) == 64
+    assert pick_tile(96, 128, multiple_of=64) is None
+
+
+def test_kernel_pass_flags_untileable_config():
+    findings = check_config_kernels("bad_tiles", BAD_TILES)
+    ker = [f for f in errors(findings) if f.code == "KER001"]
+    assert ker, findings
+    assert any("w_up" in f.location or "w_down" in f.location for f in ker)
+
+
+def test_kernel_pass_clean_on_shipped_config():
+    for name in ("tiny_dense", "llama_7b", "deepseek_moe_16b"):
+        findings = check_config_kernels(name, get_config(name))
+        assert not errors(findings), (name, findings)
+
+
+def test_kernel_vmem_budget_flagged():
+    # 1024x1024 f32 tiles: 2x(4+4+1+4 MiB streamed) + 4 MiB scratch = 30 MiB
+    plan = plan_masked_matmul(4096, 4096, 4096, bm=1024, bk=1024, bn=1024)
+    from repro.analysis.kernel_check import _vmem_findings
+
+    found = _vmem_findings(plan, "cfg", "loc")
+    assert "KER002" in codes(found)
+
+
+def test_kernel_index_map_arity_checked():
+    plan = KernelPlan(
+        kernel="k", grid=(4, 4),
+        inputs=(BlockUse("x", (8, 8), jnp.float32, lambda i: (i, 0)),),
+        outputs=(), scratch=(),
+    )
+    errs = plan.index_map_arity_errors()
+    assert errs and "takes 1 args" in errs[0] and "rank 2" in errs[0]
+
+
+def test_matmul_workloads_cover_families():
+    labels = {l for l, *_ in matmul_workloads(get_config("tiny_moe"))}
+    assert {"wq", "wo", "expert_up", "expert_down"} <= labels
+    labels = {l for l, *_ in matmul_workloads(get_config("tiny_ssm"))}
+    assert {"in_z", "ssm_out"} <= labels and "wq" not in labels
+
+
+# ---------------------------------------------------------------------------
+# pass 2: masks
+# ---------------------------------------------------------------------------
+def _weights_and_masks(key=0):
+    w = {"w_up": jax.random.normal(jax.random.PRNGKey(key), (16, 8))}
+    masks = SP.ones_masks(w)
+    return w, masks
+
+
+def test_mask_check_flags_unmasked_dot():
+    w, masks = _weights_and_masks()
+    x = jnp.ones((4, 16))
+
+    def bad_loss(weights, masks, x):
+        return jnp.sum(x @ weights["w_up"])  # mask never applied
+
+    findings = check_masked_fn(bad_loss, w, masks, x)
+    assert "MSK001" in codes(findings)
+    assert errors(findings)
+
+
+def test_mask_check_accepts_masked_dot():
+    w, masks = _weights_and_masks()
+    x = jnp.ones((4, 16))
+
+    def good_loss(weights, masks, x):
+        return jnp.sum(x @ (weights["w_up"] * masks["w_up"]))
+
+    assert check_masked_fn(good_loss, w, masks, x) == []
+
+
+def test_mask_check_sees_through_scan():
+    """The taint must follow a weight carried into lax.scan."""
+    w, masks = _weights_and_masks()
+    x = jnp.ones((4, 16))
+
+    def scan_loss(weights, masks, x):
+        def body(h, _):
+            return h @ weights["w_up"] @ weights["w_up"].T, None
+
+        h, _ = jax.lax.scan(body, x, None, length=3)
+        return jnp.sum(h)
+
+    assert "MSK001" in codes(check_masked_fn(scan_loss, w, masks, x))
+
+
+def test_mask_check_real_block_loss_is_masked():
+    """The shipped reconstruction.block_loss masks before contracting."""
+    from repro.core import reconstruction as R
+    from repro.models.model import build
+
+    cfg = get_config("tiny_dense", smoke=True)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    bw = model.get_block(params, 0)
+    masks_b = SP.ones_masks(bw)
+    h = jnp.zeros((2, 8, cfg.d_model), jnp.dtype(cfg.dtype))
+    pos = jnp.arange(8)[None, :]
+
+    def loss(bw_, masks_, h_, pos_):
+        return R.block_loss(model, 0, bw_, masks_, h_, h_, pos_, {})
+
+    assert check_masked_fn(loss, bw, masks_b, h, pos) == []
+
+
+def test_mask_tree_nm_pattern_validation():
+    w = {"w_up": jax.random.normal(jax.random.PRNGKey(1), (16, 8))}
+    mat, tag = SP.to_matrix("w_up", jnp.abs(w["w_up"]))
+    good = {"w_up": SP.from_matrix(SP.nm_mask(mat, 2, 4), tag)}
+    assert check_mask_tree(good, w, nm=(2, 4)) == []
+
+    # tamper one element: a 2:4 group now keeps 3 (or 1) -> MSK003
+    bad_arr = np.asarray(good["w_up"]).copy()
+    bad_arr[0, 0] = 1.0 - bad_arr[0, 0]
+    bad = {"w_up": jnp.asarray(bad_arr)}
+    assert "MSK003" in codes(check_mask_tree(bad, w, nm=(2, 4)))
+
+
+def test_mask_tree_rejects_nonbinary():
+    w = {"w_up": jnp.ones((8, 4))}
+    soft = {"w_up": jnp.full((8, 4), 0.5)}
+    assert "MSK002" in codes(check_mask_tree(soft, w))
+
+
+# ---------------------------------------------------------------------------
+# pass 3: jaxpr lint
+# ---------------------------------------------------------------------------
+def test_lint_flags_host_callback():
+    def f(x):
+        jax.debug.print("x={x}", x=x)
+        return x * 2
+
+    closed = jax.make_jaxpr(f)(jnp.ones((4,)))
+    findings = lint_jaxpr(closed, where="t")
+    assert "LNT002" in codes(findings) and errors(findings)
+
+
+def test_lint_flags_silent_widening():
+    def f(x):
+        return x.astype(jnp.float32) + 1.0  # widen bf16 -> f32 for an add
+
+    closed = jax.make_jaxpr(f)(jnp.ones((4,), jnp.bfloat16))
+    assert "LNT001" in codes(lint_jaxpr(closed, where="t"))
+
+
+def test_lint_allows_accumulator_widening():
+    def f(x, w):
+        # widening straight into a contraction is the accumulator idiom
+        return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+
+    closed = jax.make_jaxpr(f)(
+        jnp.ones((4, 4), jnp.bfloat16), jnp.ones((4, 4), jnp.bfloat16)
+    )
+    findings = lint_jaxpr(closed, where="t")
+    assert "LNT001" not in codes(findings)
+    assert "LNT002" not in codes(findings)
+
+
+def test_lint_flags_convert_round_trip():
+    def f(x):
+        return x.astype(jnp.bfloat16).astype(jnp.float32) * 2.0
+
+    closed = jax.make_jaxpr(f)(jnp.ones((4,), jnp.float32))
+    assert "LNT003" in codes(lint_jaxpr(closed, where="t"))
+
+
+def test_lint_clean_function_is_clean():
+    def f(x, w):
+        return jnp.tanh(x @ w)
+
+    closed = jax.make_jaxpr(f)(jnp.ones((4, 4)), jnp.ones((4, 4)))
+    assert lint_jaxpr(closed, where="t") == []
+
+
+# ---------------------------------------------------------------------------
+# pass 4: config / sharding / HLO
+# ---------------------------------------------------------------------------
+def test_config_check_flags_head_mismatch():
+    findings = check_model_config("bad_heads", BAD_HEADS)
+    assert "CFG002" in codes(findings) and errors(findings)
+
+
+def test_config_check_flags_indivisible_d_model():
+    cfg = BAD_HEADS.replace(name="bad_dm", num_heads=3, num_kv_heads=3,
+                            head_dim=0, d_model=64)
+    assert "CFG001" in codes(check_model_config("bad_dm", cfg))
+
+
+def test_config_and_sharding_clean_on_shipped():
+    for name in ("tiny_dense", "llama_7b"):
+        cfg = get_config(name)
+        assert not errors(check_model_config(name, cfg)), name
+        assert not errors(check_sharding(name, cfg)), name
+
+
+def test_sharding_warns_on_nondivisible_heads():
+    # llama_7b: 32 heads / model axis 16 divides -> no SHD003
+    assert "SHD003" not in codes(check_sharding("llama_7b", get_config("llama_7b")))
+    # qwen1_5_4b: 20 heads -> pad fallback warn
+    f = check_sharding("qwen1_5_4b", get_config("qwen1_5_4b"))
+    shd = [x for x in f if x.code == "SHD003"]
+    assert shd and shd[0].severity == "warn"
+
+
+_HLO_BAD_GROUPS = """HloModule m
+
+ENTRY %main (p0: f32[16]) -> f32[16] {
+  %p0 = f32[16]{0} parameter(0)
+  ROOT %ar = f32[16]{0} all-reduce(%p0), replica_groups={{0,1,2}}, to_apply=%add
+}
+"""
+
+_HLO_OPAQUE_WHILE = """HloModule m
+
+%cond (pc: (s32[], f32[4])) -> pred[] {
+  %pc = (s32[], f32[4]) parameter(0)
+  %i = s32[] get-tuple-element(%pc), index=0
+  %j = s32[] get-tuple-element(%pc), index=0
+  ROOT %lt = pred[] compare(%i, %j), direction=LT
+}
+
+%body (pb: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %pb = (s32[], f32[4]) parameter(0)
+  ROOT %same = (s32[], f32[4]) copy(%pb)
+}
+
+ENTRY %main (a: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %a = (s32[], f32[4]) parameter(0)
+  ROOT %w = (s32[], f32[4]) while(%a), condition=%cond, body=%body
+}
+"""
+
+
+def test_hlo_check_flags_bad_replica_groups():
+    findings = check_hlo_text(_HLO_BAD_GROUPS, total_devices=256)
+    assert "HLO002" in codes(findings) and errors(findings)
+
+
+def test_hlo_check_flags_opaque_trip_count():
+    findings = check_hlo_text(_HLO_OPAQUE_WHILE, total_devices=8)
+    assert "HLO001" in codes(findings)
+    assert not errors(findings)  # warn, not error
+
+
+def test_hlo_check_clean_on_tiled_groups():
+    text = _HLO_BAD_GROUPS.replace("{{0,1,2}}", "[16,16]<=[256]")
+    assert check_hlo_text(text, total_devices=256) == []
+
+
+# ---------------------------------------------------------------------------
+# orchestrator + CLI
+# ---------------------------------------------------------------------------
+def test_run_clean_on_tiny_config():
+    report = run(config_names=["tiny_dense"])
+    assert report.exit_code("error") == 0
+    assert report.passes_run == ["kernels", "masks", "jaxpr", "sharding"]
+    assert report.configs_checked == ["tiny_dense"]
+
+
+def test_run_seeded_violations_fail(capsys):
+    report = run(
+        config_names=["tiny_dense"],
+        passes=["kernels", "sharding"],
+        extra_configs=[("bad_tiles", BAD_TILES), ("bad_heads", BAD_HEADS)],
+    )
+    assert report.exit_code("error") == 1
+    assert {"KER001", "CFG002"} <= codes(report.findings)
+    # and --ignore-style filtering rescues it
+    clean = report.without(["KER001", "CFG002", "ANA000"])
+    assert clean.exit_code("error") == 0
+
+
+def test_run_rejects_unknown_pass():
+    with pytest.raises(ValueError):
+        run(config_names=["tiny_dense"], passes=["typo"])
+
+
+def test_cli_exit_codes_and_json(capsys):
+    from repro.analysis.__main__ import main
+
+    rc = main(["--configs", "tiny_dense", "--passes", "kernels", "sharding",
+               "--json"])
+    payload = json.loads(capsys.readouterr().out)
+    assert rc == 0
+    assert payload["counts"]["error"] == 0
+    assert payload["configs"] == ["tiny_dense"]
+
+    rc = main(["--configs", "tiny_dense", "--passes", "kernels", "sharding",
+               "--extra-config-module", "analysis_fixtures", "--json"])
+    payload = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    got = {f["code"] for f in payload["findings"]}
+    assert {"KER001", "CFG002"} <= got
+
+    rc = main(["--configs", "tiny_dense", "--passes", "kernels", "sharding",
+               "--extra-config-module", "analysis_fixtures",
+               "--fail-on", "never", "-q"])
+    capsys.readouterr()
+    assert rc == 0

@@ -106,6 +106,113 @@ def test_group_size_formats():
     assert HA.group_size(ins3, 256) == 256
 
 
+# ---------------------------------------------------------------------------
+# while-loop trip-count recovery (computation_multipliers)
+# ---------------------------------------------------------------------------
+NESTED_WHILE = """HloModule nested_loops
+
+%inner_cond (p0: (s32[], f32[8])) -> pred[] {
+  %p0 = (s32[], f32[8]) parameter(0)
+  %i = s32[] get-tuple-element(%p0), index=0
+  %three = s32[] constant(3)
+  ROOT %lt = pred[] compare(%i, %three), direction=LT
+}
+
+%inner_body (p1: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %p1 = (s32[], f32[8]) parameter(0)
+  %j = s32[] get-tuple-element(%p1), index=0
+  %x = f32[8]{0} get-tuple-element(%p1), index=1
+  %one = s32[] constant(1)
+  %jp = s32[] add(%j, %one)
+  %y = f32[8]{0} add(%x, %x)
+  ROOT %t = (s32[], f32[8]) tuple(%jp, %y)
+}
+
+%outer_cond (p3: (s32[], f32[8])) -> pred[] {
+  %p3 = (s32[], f32[8]) parameter(0)
+  ROOT %true = pred[] constant(1)
+}
+
+%outer_body (p2: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %p2 = (s32[], f32[8]) parameter(0)
+  ROOT %w_in = (s32[], f32[8]) while(%p2), condition=%inner_cond, body=%inner_body
+}
+
+ENTRY %main (arg: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %arg = (s32[], f32[8]) parameter(0)
+  ROOT %w_out = (s32[], f32[8]) while(%arg), condition=%outer_cond, body=%outer_body, backend_config={"known_trip_count":{"n":"5"}}
+}
+"""
+
+
+def test_nested_while_multipliers_multiply():
+    """Outer trip 5 (known_trip_count backend_config) x inner trip 3
+    (compare-with-constant fallback) -> the inner body runs 15 times."""
+    comps = HA.parse_module(NESTED_WHILE)
+    mult = HA.computation_multipliers(comps)
+    assert mult["main"] == 1.0
+    assert mult["outer_body"] == 5.0
+    assert mult["inner_body"] == 15.0
+    assert mult["inner_cond"] == 15.0
+
+
+def _single_while(cond_lines: str) -> str:
+    return f"""HloModule one_loop
+
+%cond (pc: (s32[], f32[4])) -> pred[] {{
+  %pc = (s32[], f32[4]) parameter(0)
+{cond_lines}
+}}
+
+%body (pb: (s32[], f32[4])) -> (s32[], f32[4]) {{
+  %pb = (s32[], f32[4]) parameter(0)
+  ROOT %same = (s32[], f32[4]) copy(%pb)
+}}
+
+ENTRY %main (a: (s32[], f32[4])) -> (s32[], f32[4]) {{
+  %a = (s32[], f32[4]) parameter(0)
+  ROOT %w = (s32[], f32[4]) while(%a), condition=%cond, body=%body
+}}
+"""
+
+
+def test_trip_count_compare_with_constant_fallback():
+    text = _single_while(
+        "  %i = s32[] get-tuple-element(%pc), index=0\n"
+        "  %seven = s32[] constant(7)\n"
+        "  ROOT %lt = pred[] compare(%i, %seven), direction=LT"
+    )
+    mult = HA.computation_multipliers(HA.parse_module(text))
+    assert mult["body"] == 7.0
+
+
+def test_trip_count_known_trip_count_wins_over_condition():
+    """When backend_config carries known_trip_count, the condition's
+    constants must be ignored (XLA's count is authoritative)."""
+    text = _single_while(
+        "  %i = s32[] get-tuple-element(%pc), index=0\n"
+        "  %seven = s32[] constant(7)\n"
+        "  ROOT %lt = pred[] compare(%i, %seven), direction=LT"
+    ).replace(
+        "condition=%cond, body=%body",
+        'condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"11"}}',
+    )
+    mult = HA.computation_multipliers(HA.parse_module(text))
+    assert mult["body"] == 11.0
+
+
+def test_trip_count_unrecoverable_defaults_to_one():
+    """Data-dependent loop (no constant in the condition): multiplier
+    conservatively defaults to 1 — the analysis pass reports HLO001."""
+    text = _single_while(
+        "  %i = s32[] get-tuple-element(%pc), index=0\n"
+        "  %j = s32[] get-tuple-element(%pc), index=0\n"
+        "  ROOT %lt = pred[] compare(%i, %j), direction=LT"
+    )
+    mult = HA.computation_multipliers(HA.parse_module(text))
+    assert mult["body"] == 1.0
+
+
 def test_dot_flops_from_named_operands():
     comps = HA.parse_module(
         """HloModule m

@@ -7,14 +7,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config, list_configs
 from repro.distributed import sharding as SH
+from repro.launch.mesh import make_abstract_mesh
 from repro.models.model import build
 
-MESH1 = AbstractMesh((16, 16), ("data", "model"))
-MESH2 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH1 = make_abstract_mesh((16, 16), ("data", "model"))
+MESH2 = make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def _shapes_tree(arch):
