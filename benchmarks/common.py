@@ -28,6 +28,9 @@ from repro.data.tokens import (
     CorpusConfig, SyntheticCorpus, calibration_set, corpus_iterator, eval_set,
 )
 from repro.models.model import build
+from repro.obs import metrics as OM
+from repro.obs import trace as OT
+from repro.obs.run import current_run
 from repro.optim.optimizers import adamw
 from repro.training.train_loop import make_train_step
 
@@ -78,14 +81,23 @@ def standard_sets(model, n_calib: int = 64, seq: int = 128):
 
 def run_ebft(model, dense, pruned, masks, calib, epochs: int = 8):
     ecfg = ebft.EBFTConfig(lr=EBFT_LR, epochs=epochs, microbatch=8, patience=3)
-    t0 = time.time()
-    tuned, reports = ebft.finetune(model, dense, pruned, masks, calib, ecfg)
-    return tuned, reports, time.time() - t0
+    t0 = time.perf_counter()
+    with OT.span("bench/ebft", epochs=epochs, lr=EBFT_LR) as sp:
+        tuned, reports = ebft.finetune(model, dense, pruned, masks, calib, ecfg)
+        sp.fence(tuned)
+    elapsed = time.perf_counter() - t0
+    OM.histogram("bench/ebft_s").observe(elapsed)
+    return tuned, reports, elapsed
 
 
 # ---------------------------------------------------------------------------
 class Table:
-    """Collects rows, prints aligned text + writes CSV to experiments/."""
+    """Collects rows, prints aligned text + writes CSV to experiments/.
+
+    Console output is one sink; when an obs run is active (benchmarks/run.py
+    starts one per table) each row is also mirrored into the JSONL event
+    stream and the final summary artifact via ``Run.say``.
+    """
 
     def __init__(self, name: str, columns: List[str]):
         self.name = name
@@ -94,7 +106,12 @@ class Table:
 
     def add(self, *row):
         self.rows.append(list(row))
-        print("  " + "  ".join(f"{v}" for v in row), flush=True)
+        line = "  " + "  ".join(f"{v}" for v in row)
+        run = current_run()
+        if run is not None:
+            run.say(line)
+        else:
+            print(line, flush=True)
 
     def write(self, out_dir: Optional[str] = None):
         out_dir = out_dir or os.path.join(

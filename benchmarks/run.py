@@ -3,20 +3,26 @@
     python -m benchmarks.run            # quick grids (CI-sized)
     python -m benchmarks.run --full     # the paper's full grids
     python -m benchmarks.run --only table1,table6
+    python -m benchmarks.run --no-obs   # console/CSV only, no artifacts
 
 Each table prints rows as it goes, writes a CSV under
-experiments/benchmarks/, and the roofline report (deliverable g) is
+experiments/benchmarks/, and — unless ``--no-obs`` — runs inside an
+observability run that writes ``experiments/benchmarks/BENCH_<name>.json``
+(manifest + metrics + trace + the table rows; render with
+``python -m repro.obs report``). The roofline report (deliverable g) is
 appended from the dry-run artifacts if present.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 from benchmarks import (
     fig2_calibration, roofline_report, table1_unstructured, table2_nm,
     table3_zeroshot, table4_lora, table6_masktuning,
 )
+from repro.obs.run import start_run
 
 ALL = {
     "table1": lambda quick: table1_unstructured.run(quick=quick),
@@ -27,20 +33,43 @@ ALL = {
     "table6": lambda quick: table6_masktuning.run(quick=quick),
 }
 
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "benchmarks")
+
+
+def run_one(name: str, quick: bool, obs: bool) -> float:
+    """Run one table under its own obs run; returns elapsed seconds."""
+    run = None
+    if obs:
+        run = start_run(f"bench_{name}",
+                        extra_manifest={"quick": quick, "table": name})
+    t0 = time.perf_counter()
+    table = ALL[name](quick=quick)
+    dt = time.perf_counter() - t0
+    if run is not None:
+        extra = {"elapsed_s": dt}
+        if table is not None and hasattr(table, "rows"):
+            extra["table"] = {"name": table.name, "columns": table.columns,
+                              "rows": table.rows}
+        os.makedirs(OUT_DIR, exist_ok=True)
+        run.finish(extra=extra,
+                   summary_path=os.path.join(OUT_DIR, f"BENCH_{name}.json"))
+    return dt
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-sized grids")
     ap.add_argument("--only", default="", help="comma list of table names")
+    ap.add_argument("--no-obs", action="store_true",
+                    help="disable observability artifacts")
     args = ap.parse_args()
 
     names = args.only.split(",") if args.only else list(ALL)
-    t_all = time.time()
+    t_all = time.perf_counter()
     for name in names:
         print(f"\n=== {name} {'(full)' if args.full else '(quick)'} ===", flush=True)
-        t0 = time.time()
-        ALL[name](quick=not args.full)
-        print(f"=== {name} done in {time.time()-t0:.0f}s ===")
+        dt = run_one(name, quick=not args.full, obs=not args.no_obs)
+        print(f"=== {name} done in {dt:.0f}s ===")
 
     print("\n=== roofline (from dry-run artifacts) ===")
     try:
@@ -50,7 +79,7 @@ def main() -> None:
             roofline_report.run("baseline")
     except Exception as e:  # noqa: BLE001 — dry-run may not have run yet
         print(f"(skipped: {e})")
-    print(f"\nall benchmarks done in {time.time()-t_all:.0f}s")
+    print(f"\nall benchmarks done in {time.perf_counter()-t_all:.0f}s")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,6 @@
 """repro.analysis — static invariant checkers for the EBFT repro.
 
-Four passes, one report (``python -m repro.analysis``; docs/ANALYSIS.md):
+Five passes, one report (``python -m repro.analysis``; docs/ANALYSIS.md):
 
   * ``kernels``  — Pallas tile divisibility / VMEM budget / BlockSpec
     arity, against the same :mod:`repro.kernels.validation` plans the
@@ -12,7 +12,10 @@ Four passes, one report (``python -m repro.analysis``; docs/ANALYSIS.md):
     step: silent widenings, host syncs, convert round-trips (LNT0xx);
   * ``sharding`` — config arithmetic + PartitionSpec-vs-mesh validation,
     and HLO collective/trip-count checks when HLO text is supplied
-    (CFG0xx / SHD0xx / HLO0xx).
+    (CFG0xx / SHD0xx / HLO0xx);
+  * ``source_lint`` — config-independent source hygiene: ``print()`` in
+    hot-path packages and non-monotonic ``time.time()`` anywhere in
+    ``src/repro`` must go through repro.obs instead (OBS0xx).
 
 Findings carry stable codes and severities (error/warn/info); the CLI
 exit code is governed by ``--fail-on`` and individual codes can be
@@ -27,7 +30,8 @@ from repro.analysis.passes import PASSES
 from repro.configs import ARCH_IDS, EXTRA_IDS, get_config
 from repro.configs.base import ModelConfig
 
-PASS_NAMES = tuple(PASSES)  # ("kernels", "masks", "jaxpr", "sharding")
+# per-config passes from PASSES, plus the config-independent source scan
+PASS_NAMES = tuple(PASSES) + ("source_lint",)
 
 __all__ = [
     "Finding", "Report", "SEVERITIES", "PASS_NAMES",
@@ -70,7 +74,7 @@ def run(
     """
     selected = list(passes) if passes else list(PASS_NAMES)
     for p in selected:
-        if p not in PASSES:
+        if p not in PASS_NAMES:
             raise ValueError(f"unknown pass {p!r}; available: {PASS_NAMES}")
 
     triples = resolve_configs(config_names)
@@ -79,8 +83,9 @@ def run(
 
     report = Report(passes_run=selected,
                     configs_checked=[t[0] for t in triples])
+    per_config = [p for p in selected if p in PASSES]
     for name, cfg, smoke in triples:
-        for pname in selected:
+        for pname in per_config:
             if progress:
                 progress(f"{pname:<9} {name}")
             try:
@@ -91,6 +96,20 @@ def run(
                     config=name, location="internal",
                     message=f"pass crashed: {type(e).__name__}: {e}",
                 )])
+
+    if "source_lint" in selected:
+        from repro.analysis.source_lint import check_sources
+
+        if progress:
+            progress("source_lint src/repro")
+        try:
+            report.add(check_sources())
+        except Exception as e:  # a crashed pass is itself a finding
+            report.add([Finding(
+                code="ANA000", severity="error", pass_name="source_lint",
+                location="internal",
+                message=f"pass crashed: {type(e).__name__}: {e}",
+            )])
 
     if hlo_dir and "sharding" in selected:
         from repro.analysis.config_check import check_hlo_dir

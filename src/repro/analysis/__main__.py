@@ -46,7 +46,7 @@ def main(argv=None) -> int:
                     help=f"config subset (default: all — "
                          f"{', '.join(ARCH_IDS + EXTRA_IDS)})")
     ap.add_argument("--passes", nargs="*", default=None, choices=PASS_NAMES,
-                    help="pass subset (default: all four)")
+                    help="pass subset (default: all five)")
     ap.add_argument("--fail-on", default="error",
                     choices=("error", "warn", "info", "never"),
                     help="minimum severity that makes the exit code "

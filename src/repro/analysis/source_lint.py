@@ -1,0 +1,101 @@
+"""Source-hygiene pass: keep ad-hoc I/O and clocks out of hot paths.
+
+With the observability layer in place (docs/OBSERVABILITY.md), library
+code under ``src/repro`` must not reach for ``print()`` or
+``time.time()`` directly:
+
+  * ``print()`` in a hot-path package (OBS001) bypasses the sink model —
+    output is invisible to artifacts and un-silenceable in benchmarks.
+    Launch drivers and CLIs are exempt: console text is their job (they
+    route it through ``Run.say`` when a run is active).
+  * ``time.time()`` anywhere in ``src/repro`` (OBS002) is the wrong
+    clock for measurement — it is not monotonic (NTP steps produce
+    negative durations). Spans use ``time.perf_counter``; wall-clock
+    timestamps belong in the run manifest only.
+
+The pass is config-independent: it scans the source tree once per
+analysis run, skipping ``repro.obs`` (it *implements* the clocks/sinks)
+and ``repro.analysis`` (self-scan).
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import List, Optional
+
+from repro.analysis.findings import Finding
+
+# packages where print() is a finding; launch/ and configs/ are CLIs and
+# declarative tables — console output is legitimate there.
+HOT_PATH_DIRS = (
+    "core", "training", "serving", "kernels", "optim", "sparsity",
+    "models", "distributed", "checkpoint", "data",
+)
+
+# never scanned: obs implements the sinks/clocks, analysis is this pass.
+EXCLUDE_DIRS = ("obs", "analysis")
+
+_PRINT = re.compile(r"(?<![\w.])print\s*\(")
+_TIME_TIME = re.compile(r"(?<![\w.])time\.time\s*\(")
+
+
+def _code_part(line: str) -> str:
+    """Strip a trailing comment (best-effort: ignores '#' inside strings
+    only when the line starts as a comment — good enough for a lint)."""
+    stripped = line.lstrip()
+    if stripped.startswith("#"):
+        return ""
+    return line
+
+
+def _scan_file(path: str, rel: str, in_hot_path: bool) -> List[Finding]:
+    findings: List[Finding] = []
+    try:
+        with open(path, encoding="utf-8") as f:
+            lines = f.readlines()
+    except OSError:
+        return findings
+    for lineno, raw in enumerate(lines, start=1):
+        line = _code_part(raw)
+        if not line:
+            continue
+        where = f"{rel}:{lineno}"
+        if in_hot_path and _PRINT.search(line):
+            findings.append(Finding(
+                code="OBS001", severity="warn", pass_name="source_lint",
+                location=where,
+                message="print() in hot-path package; use the obs console "
+                        "sink (repro.obs run.say) or a metric instead",
+            ))
+        if _TIME_TIME.search(line):
+            findings.append(Finding(
+                code="OBS002", severity="warn", pass_name="source_lint",
+                location=where,
+                message="time.time() is non-monotonic; use "
+                        "time.perf_counter() (or an obs span) for timing",
+            ))
+    return findings
+
+
+def check_sources(src_root: Optional[str] = None) -> List[Finding]:
+    """Scan ``src/repro`` (or ``src_root``) for OBS0xx hygiene findings."""
+    if src_root is None:
+        src_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    findings: List[Finding] = []
+    for dirpath, dirnames, filenames in os.walk(src_root):
+        rel_dir = os.path.relpath(dirpath, src_root)
+        top = rel_dir.split(os.sep)[0]
+        if top in EXCLUDE_DIRS:
+            dirnames[:] = []
+            continue
+        dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+        in_hot_path = top in HOT_PATH_DIRS
+        for fname in sorted(filenames):
+            if not fname.endswith(".py"):
+                continue
+            rel = os.path.join("repro", rel_dir, fname) if rel_dir != "." \
+                else os.path.join("repro", fname)
+            findings.extend(
+                _scan_file(os.path.join(dirpath, fname), rel, in_hot_path)
+            )
+    return findings

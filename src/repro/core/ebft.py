@@ -35,6 +35,9 @@ import numpy as np
 
 from repro.core import reconstruction as R
 from repro.core.pruning import common as C
+from repro.obs import metrics as OM
+from repro.obs import trace as OT
+from repro.obs.profile import ebft_live_block_bytes
 from repro.optim.optimizers import adam, apply_updates
 from repro.optim.schedules import plateau_early_stop
 from repro.sparsity.sparse_params import apply_masks
@@ -59,6 +62,12 @@ class BlockReport:
     epochs_run: int
     loss_before: float
     loss_after: float
+    early_stop: str = "max_epochs"   # "plateau" | "max_epochs"
+    history: List[float] = dataclasses.field(default_factory=list)
+    live_bytes: int = 0              # weights + masks + f32 Adam moments
+
+    def asdict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
 
 
 # ---------------------------------------------------------------------------
@@ -99,24 +108,41 @@ def tune_block(
         step_cache[kind] = _make_tune_step(model, i, ecfg)
     opt, step, eval_loss = step_cache[kind]
 
-    before = float(
-        np.mean([float(eval_loss(bp, mask_bp, *mb)) for mb in data])
-    )
-    opt_state = opt.init(bp)
-    history: List[float] = [before]
-    epochs_run = 0
-    for _ in range(ecfg.epochs):
-        ep = 0.0
-        for mb in data:
-            bp, opt_state, loss = step(bp, opt_state, mask_bp, *mb)
-            ep += float(loss)
-        epochs_run += 1
-        history.append(ep / max(len(data), 1))
-        if plateau_early_stop(history, ecfg.patience, ecfg.rel_tol):
-            break
-    after = float(np.mean([float(eval_loss(bp, mask_bp, *mb)) for mb in data]))
-    bp = apply_masks(bp, mask_bp)
-    return bp, BlockReport(i, kind, epochs_run, before, after)
+    with OT.span("ebft/block", index=i, kind=kind) as sp:
+        before = float(
+            np.mean([float(eval_loss(bp, mask_bp, *mb)) for mb in data])
+        )
+        opt_state = opt.init(bp)
+        history: List[float] = [before]
+        epochs_run = 0
+        early_stop = "max_epochs"
+        for _ in range(ecfg.epochs):
+            ep = 0.0
+            for mb in data:
+                bp, opt_state, loss = step(bp, opt_state, mask_bp, *mb)
+                ep += float(loss)
+            epochs_run += 1
+            history.append(ep / max(len(data), 1))
+            if plateau_early_stop(history, ecfg.patience, ecfg.rel_tol):
+                early_stop = "plateau"
+                break
+        after = float(np.mean([float(eval_loss(bp, mask_bp, *mb)) for mb in data]))
+        bp = apply_masks(bp, mask_bp)
+
+        live = 0
+        if OT.enabled():
+            # the streaming claim, measured: only this block's weights,
+            # masks, and Adam moments are optimizer-live right now
+            live = ebft_live_block_bytes(bp, mask_bp)
+            OM.gauge("ebft/live_block_bytes").set(live)  # summary max = peak
+            OM.series("ebft/loss_before").append(before, step=i)
+            OM.series("ebft/loss_after").append(after, step=i)
+            OM.series("ebft/epochs_run").append(epochs_run, step=i)
+            OM.counter(f"ebft/early_stop/{early_stop}").inc()
+            sp.set(epochs=epochs_run, loss_before=before, loss_after=after,
+                   early_stop=early_stop, live_bytes=live)
+    return bp, BlockReport(i, kind, epochs_run, before, after,
+                           early_stop, history, live)
 
 
 # ---------------------------------------------------------------------------
@@ -132,54 +158,56 @@ def finetune(
 ) -> Tuple[Params, List[BlockReport]]:
     """The EBFT driver. Returns (fine-tuned sparse params, per-block reports)."""
     ecfg = ecfg or EBFTConfig()
-    student = apply_masks(pruned_params, masks)
-    reports: List[BlockReport] = []
-    step_cache: Dict = {}
+    with OT.span("ebft/walk", epochs=ecfg.epochs, lr=ecfg.lr,
+                 microbatch=ecfg.microbatch):
+        student = apply_masks(pruned_params, masks)
+        reports: List[BlockReport] = []
+        step_cache: Dict = {}
 
-    shared_idx = (
-        model.num_blocks - 1 if model.cfg.family == "hybrid" else None
-    )
-    shared_sites: List[Tuple] = []
-
-    def visit(i, bp, ctx):
-        mask_bp = model.get_block(masks, i)
-        data = list(
-            zip(ctx["h_mb"], ctx["target_mb"], ctx["pos_mb"], ctx["aux_mb"])
+        shared_idx = (
+            model.num_blocks - 1 if model.cfg.family == "hybrid" else None
         )
-        if i == shared_idx:
-            shared_sites.extend(data)  # tune once on the union (sum of sites)
-            return None
-        tuned, rep = tune_block(model, i, bp, mask_bp, data, ecfg, step_cache)
-        reports.append(rep)
-        if log:
-            log(
-                f"block {i:3d} [{rep.kind}] epochs={rep.epochs_run} "
-                f"E: {rep.loss_before:.3e} -> {rep.loss_after:.3e}"
+        shared_sites: List[Tuple] = []
+
+        def visit(i, bp, ctx):
+            mask_bp = model.get_block(masks, i)
+            data = list(
+                zip(ctx["h_mb"], ctx["target_mb"], ctx["pos_mb"], ctx["aux_mb"])
             )
-        return tuned
+            if i == shared_idx:
+                shared_sites.extend(data)  # tune once on the union (sum of sites)
+                return None
+            tuned, rep = tune_block(model, i, bp, mask_bp, data, ecfg, step_cache)
+            reports.append(rep)
+            if log:
+                log(
+                    f"block {i:3d} [{rep.kind}] epochs={rep.epochs_run} "
+                    f"E: {rep.loss_before:.3e} -> {rep.loss_after:.3e}"
+                )
+            return tuned
 
-    result = C.walk_blocks(
-        model,
-        dense_params,
-        calib,
-        visit,
-        microbatch=ecfg.microbatch,
-        extra_batch=extra_batch,
-        params_student=student,
-        dual_stream=True,
-    )
-
-    if shared_idx is not None and shared_sites:
-        bp = model.get_block(result, shared_idx)
-        mask_bp = model.get_block(masks, shared_idx)
-        tuned, rep = tune_block(
-            model, shared_idx, bp, mask_bp, shared_sites, ecfg, step_cache
+        result = C.walk_blocks(
+            model,
+            dense_params,
+            calib,
+            visit,
+            microbatch=ecfg.microbatch,
+            extra_batch=extra_batch,
+            params_student=student,
+            dual_stream=True,
         )
-        reports.append(rep)
-        if log:
-            log(
-                f"shared block [{rep.kind}] ({len(shared_sites)} site-batches) "
-                f"E: {rep.loss_before:.3e} -> {rep.loss_after:.3e}"
+
+        if shared_idx is not None and shared_sites:
+            bp = model.get_block(result, shared_idx)
+            mask_bp = model.get_block(masks, shared_idx)
+            tuned, rep = tune_block(
+                model, shared_idx, bp, mask_bp, shared_sites, ecfg, step_cache
             )
-        result = model.set_block(result, shared_idx, tuned)
+            reports.append(rep)
+            if log:
+                log(
+                    f"shared block [{rep.kind}] ({len(shared_sites)} site-batches) "
+                    f"E: {rep.loss_before:.3e} -> {rep.loss_after:.3e}"
+                )
+            result = model.set_block(result, shared_idx, tuned)
     return result, reports

@@ -4,6 +4,10 @@
 GQA head-repetition folded in; used by models/layers.attend when
 impl="flash" on TPU. Off-TPU the portable chunked-jnp path in
 models/layers.py is the equivalent (same online-softmax recurrence).
+
+Observability accounting: 4·BH·Sq·Sk·hd FLOPs (QKᵀ + PV), halved for
+causal masking; HBM traffic is q/k/v/out (the whole point of the fused
+kernel is that the S×S score matrix never touches HBM).
 """
 from __future__ import annotations
 
@@ -12,6 +16,8 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention.flash_attention import flash_attention as _kernel
 from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.obs import trace as OT
+from repro.obs.profile import is_abstract, record_kernel
 
 
 def on_tpu() -> bool:
@@ -19,12 +25,22 @@ def on_tpu() -> bool:
 
 
 def flash_attention(q, k, v, *, causal=True, q_offset=0, interpret=False, **tiles):
-    if on_tpu() or interpret:
-        return _kernel(
-            q, k, v, causal=causal, q_offset=q_offset,
-            interpret=interpret or not on_tpu(), **tiles,
-        )
-    return flash_attention_ref(q, k, v, causal=causal, q_offset=q_offset)
+    def run():
+        if on_tpu() or interpret:
+            return _kernel(
+                q, k, v, causal=causal, q_offset=q_offset,
+                interpret=interpret or not on_tpu(), **tiles,
+            )
+        return flash_attention_ref(q, k, v, causal=causal, q_offset=q_offset)
+
+    if not OT.enabled() or is_abstract(q, k, v):
+        return run()
+    BH, Sq, hd = q.shape
+    Sk = k.shape[1]
+    flops = 4.0 * BH * Sq * Sk * hd * (0.5 if causal else 1.0)
+    traffic = sum(a.size * a.dtype.itemsize for a in (q, k, v)) \
+        + q.size * q.dtype.itemsize
+    return record_kernel("kernels/flash_attention", flops, traffic, run)
 
 
 def flash_attention_bshd(q, k, v, *, causal=True, q_offset=0, interpret=False):

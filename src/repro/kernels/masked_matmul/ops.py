@@ -1,12 +1,20 @@
 """jit'd public wrapper: dispatches to the Pallas kernel on TPU, to the
 interpreted kernel under ``interpret=True`` (CPU validation), and to the
-jnp oracle otherwise."""
+jnp oracle otherwise.
+
+When observability is live (repro.obs) and the call is concrete (not
+inside an outer jit trace), the invocation is fenced and booked against
+the roofline model: 2·M·K·N FLOPs, x/w/mask/out HBM traffic.
+"""
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 from repro.kernels.masked_matmul.masked_matmul import masked_matmul as _kernel
 from repro.kernels.masked_matmul.ref import masked_matmul_ref
+from repro.obs import trace as OT
+from repro.obs.profile import is_abstract, record_kernel
 
 
 def on_tpu() -> bool:
@@ -14,6 +22,16 @@ def on_tpu() -> bool:
 
 
 def masked_matmul(x, w, m, interpret: bool = False, **tiles):
-    if on_tpu() or interpret:
-        return _kernel(x, w, m, interpret=interpret or not on_tpu(), **tiles)
-    return masked_matmul_ref(x, w, m)
+    def run():
+        if on_tpu() or interpret:
+            return _kernel(x, w, m, interpret=interpret or not on_tpu(), **tiles)
+        return masked_matmul_ref(x, w, m)
+
+    if not OT.enabled() or is_abstract(x, w, m):
+        return run()
+    K, N = w.shape[-2], w.shape[-1]
+    rows = int(np.prod(x.shape[:-1]))
+    flops = 2.0 * rows * K * N
+    traffic = (x.size * x.dtype.itemsize + w.size * w.dtype.itemsize
+               + m.size * m.dtype.itemsize + rows * N * x.dtype.itemsize)
+    return record_kernel("kernels/masked_matmul", flops, traffic, run)

@@ -1,10 +1,19 @@
-"""jit'd public wrapper for nm_spmm (TPU kernel / interpret / jnp oracle)."""
+"""jit'd public wrapper for nm_spmm (TPU kernel / interpret / jnp oracle).
+
+Observability accounting: the MXU work is the *dense-equivalent*
+2·M·K·N (masking removes no multiplies — DESIGN.md §3), but the weight
+traffic is the compressed vals+idx stream, which is exactly the
+bandwidth win the kernel exists for; the booked bytes reflect that.
+"""
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 from repro.kernels.nm_spmm.nm_spmm import nm_spmm as _kernel
 from repro.kernels.nm_spmm.ref import nm_spmm_ref
+from repro.obs import trace as OT
+from repro.obs.profile import is_abstract, record_kernel
 
 
 def on_tpu() -> bool:
@@ -12,8 +21,19 @@ def on_tpu() -> bool:
 
 
 def nm_spmm(x, vals, idx, *, n, m, interpret: bool = False, **tiles):
-    if on_tpu() or interpret:
-        return _kernel(
-            x, vals, idx, n=n, m=m, interpret=interpret or not on_tpu(), **tiles
-        )
-    return nm_spmm_ref(x, vals, idx, n=n, m=m)
+    def run():
+        if on_tpu() or interpret:
+            return _kernel(
+                x, vals, idx, n=n, m=m, interpret=interpret or not on_tpu(), **tiles
+            )
+        return nm_spmm_ref(x, vals, idx, n=n, m=m)
+
+    if not OT.enabled() or is_abstract(x, vals, idx):
+        return run()
+    K = x.shape[-1]
+    N = vals.shape[-1]
+    rows = int(np.prod(x.shape[:-1]))
+    flops = 2.0 * rows * K * N  # dense-equivalent MXU work
+    traffic = (x.size * x.dtype.itemsize + vals.size * vals.dtype.itemsize
+               + idx.size * idx.dtype.itemsize + rows * N * x.dtype.itemsize)
+    return record_kernel("kernels/nm_spmm", flops, traffic, run)

@@ -35,6 +35,8 @@ from repro.launch import hlo_analysis as HA
 from repro.launch import rooflines as RL
 from repro.launch import steps as ST
 from repro.launch.mesh import make_production_mesh
+from repro.obs import metrics as OM
+from repro.obs import trace as OT
 
 
 def run_cell(
@@ -67,7 +69,7 @@ def run_cell(
         "arch": arch, "shape": shape_name, "mesh": mesh_name, "chips": chips,
         "kind": shape.kind,
     }
-    t0 = time.time()
+    t0 = time.perf_counter()
     try:
         if shape.kind == "train":
             cell = ST.build_cell(cfg, shape, mesh, fsdp=fsdp, microbatches=microbatches)
@@ -75,11 +77,17 @@ def run_cell(
             cell = ST.build_ebft_cell(cfg, shape, mesh, dp_only=ebft_dp)
         else:
             cell = ST.build_cell(cfg, shape, mesh)
-        with mesh:
+        with mesh, OT.span("dryrun/cell", arch=arch, shape=shape_name,
+                           mesh=mesh_name):
             lowered = ST.lower_cell(cell)
-            t_lower = time.time() - t0
+            t_lower = time.perf_counter() - t0
             compiled = lowered.compile()
-            t_compile = time.time() - t0 - t_lower
+            t_compile = time.perf_counter() - t0 - t_lower
+        if OT.enabled():
+            OM.gauge(f"dryrun/{arch}__{shape_name}__{mesh_name}/lower_s").set(t_lower)
+            OM.gauge(
+                f"dryrun/{arch}__{shape_name}__{mesh_name}/compile_s"
+            ).set(t_compile)
 
         ma = compiled.memory_analysis()
         rec["memory_analysis"] = {

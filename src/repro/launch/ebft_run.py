@@ -9,6 +9,13 @@ LoRA and EBFT on held-out perplexity. On the container this runs the tiny
 configs; with real devices the identical driver handles the assigned
 archs (the walk is block-streamed, so memory stays one-block-sized —
 the paper's 16 GB property).
+
+Fully instrumented via repro.obs (docs/OBSERVABILITY.md): every phase is
+a span, per-block reconstruction data flows into the metrics registry,
+and the run writes a ``BENCH_ebft.json`` artifact (manifest + phases +
+per-block losses + peak live-block bytes + perplexities) that
+``python -m repro.obs report`` renders. ``--no-obs`` disables all of it;
+the console output is identical either way (it is just a sink).
 """
 from __future__ import annotations
 
@@ -26,11 +33,38 @@ from repro.data.tokens import (
     CorpusConfig, SyntheticCorpus, calibration_set, corpus_iterator, eval_set,
 )
 from repro.models.model import build
+from repro.obs import metrics as OM
+from repro.obs import trace as OT
+from repro.obs.run import start_run
 from repro.optim.optimizers import adamw
 from repro.training.train_loop import make_train_step
 
 
-def pretrain(model, params, corpus, steps: int, batch: int, seq: int, lr: float):
+class _phase:
+    """A pipeline phase: an obs span when observability is on, and a
+    plain monotonic wall-time either way (console timings survive
+    ``--no-obs``)."""
+
+    def __init__(self, name: str, **attrs):
+        self.span = OT.span(name, **attrs)
+        self.duration = 0.0
+
+    def __enter__(self) -> "_phase":
+        self._t0 = time.perf_counter()
+        self.span.__enter__()
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.span.__exit__(*exc)
+        self.duration = time.perf_counter() - self._t0
+        return False
+
+    def fence(self, value):
+        return self.span.fence(value)
+
+
+def pretrain(model, params, corpus, steps: int, batch: int, seq: int, lr: float,
+             say=print):
     opt = adamw(lr)
     step = jax.jit(make_train_step(model.loss, opt))
     opt_state = opt.init(params)
@@ -41,11 +75,13 @@ def pretrain(model, params, corpus, steps: int, batch: int, seq: int, lr: float)
             params, opt_state, {"tokens": jnp.asarray(next(it))}, None
         )
         loss = float(metrics["loss"])
-    print(f"pretrained {steps} steps, final loss {loss:.3f}")
+        if i % 20 == 0 or i == steps - 1:
+            OM.series("pretrain/loss").append(loss, step=i)
+    say(f"pretrained {steps} steps, final loss {loss:.3f}")
     return params
 
 
-def main() -> None:
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tiny_dense")
     ap.add_argument("--pretrain-steps", type=int, default=200)
@@ -61,54 +97,121 @@ def main() -> None:
     ap.add_argument("--baselines", default="",
                     help="comma list of {dsnot,mask,lora} to also run")
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    ap.add_argument("--no-obs", action="store_true",
+                    help="disable observability (no artifact, no metrics)")
+    ap.add_argument("--bench-out", default="BENCH_ebft.json",
+                    help="run-artifact path (JSON summary)")
+    ap.add_argument("--obs-jsonl", default="",
+                    help="optional JSONL event-stream path")
+    args = ap.parse_args(argv)
+
+    run = None
+    if not args.no_obs:
+        run = start_run(
+            "ebft_run", config=args.arch, method=args.method,
+            sparsity=args.sparsity, pattern=args.pattern or None,
+            jsonl_path=args.obs_jsonl or None,
+            extra_manifest={
+                "ebft_lr": args.ebft_lr, "ebft_epochs": args.ebft_epochs,
+                "calib_samples": args.calib_samples, "seq": args.seq,
+                "seed": args.seed,
+            },
+        )
+    say = run.say if run is not None else print
 
     cfg = get_config(args.arch)
     model = build(cfg)
     corpus = SyntheticCorpus(CorpusConfig(vocab_size=cfg.vocab_size, seed=args.seed))
     params = model.init(jax.random.PRNGKey(args.seed))
+    phases = {}
+    ppl = {}
+
     if args.pretrain_steps:
-        params = pretrain(model, params, corpus, args.pretrain_steps,
-                          args.batch, args.seq, 3e-3)
+        with _phase("phase/pretrain", steps=args.pretrain_steps) as sp:
+            params = sp.fence(pretrain(model, params, corpus,
+                                       args.pretrain_steps, args.batch,
+                                       args.seq, 3e-3, say=say))
+        phases["pretrain"] = sp.duration
 
     calib = calibration_set(corpus, args.calib_samples, args.seq)
     ev = eval_set(corpus, 16, args.seq)
     pattern = tuple(int(x) for x in args.pattern.split(":")) if args.pattern else None
 
-    ppl_dense = perplexity(model, params, ev)
-    print(f"dense ppl          {ppl_dense:8.2f}")
+    with _phase("phase/eval", what="dense") as sp:
+        ppl["dense"] = perplexity(model, params, ev)
+    phases["eval_dense"] = sp.duration
+    say(f"dense ppl          {ppl['dense']:8.2f}")
 
-    t0 = time.time()
-    masks, pruned = prune(model, params, calib, method=args.method,
-                          sparsity=args.sparsity, pattern=pattern)
-    print(f"{args.method} ppl {' ' * (10 - len(args.method))}"
-          f"{perplexity(model, pruned, ev):8.2f}   ({time.time()-t0:.0f}s)")
+    with _phase("phase/prune", method=args.method,
+                 sparsity=args.sparsity) as sp:
+        masks, pruned = prune(model, params, calib, method=args.method,
+                              sparsity=args.sparsity, pattern=pattern)
+        sp.fence(pruned)
+    phases["prune"] = sp.duration
+    ppl[args.method] = perplexity(model, pruned, ev)
+    say(f"{args.method} ppl {' ' * (10 - len(args.method))}"
+        f"{ppl[args.method]:8.2f}   ({phases['prune']:.0f}s)")
 
-    t0 = time.time()
     ecfg = ebft.EBFTConfig(lr=args.ebft_lr, epochs=args.ebft_epochs)
-    tuned, reports = ebft.finetune(model, params, pruned, masks, calib, ecfg)
-    print(f"EBFT ppl           {perplexity(model, tuned, ev):8.2f}   "
-          f"({time.time()-t0:.0f}s, {len(reports)} blocks, "
-          f"mean E drop {sum(r.loss_before - r.loss_after for r in reports) / max(len(reports), 1):.3e})")
+    with _phase("phase/ebft", lr=args.ebft_lr, epochs=args.ebft_epochs) as sp:
+        tuned, reports = ebft.finetune(model, params, pruned, masks, calib, ecfg)
+        sp.fence(tuned)
+    phases["ebft"] = sp.duration
+    with _phase("phase/eval", what="ebft") as sp:
+        ppl["EBFT"] = perplexity(model, tuned, ev)
+    phases["eval_ebft"] = sp.duration
+    mean_drop = sum(r.loss_before - r.loss_after for r in reports) \
+        / max(len(reports), 1)
+    say(f"EBFT ppl           {ppl['EBFT']:8.2f}   "
+        f"({phases['ebft']:.0f}s, {len(reports)} blocks, "
+        f"mean E drop {mean_drop:.3e})")
 
     wants = set(args.baselines.split(",")) if args.baselines else set()
     if "dsnot" in wants:
-        t0 = time.time()
-        _, ds = prune(model, params, calib, method="dsnot",
-                      sparsity=args.sparsity, pattern=pattern,
-                      dsnot_init=args.method if args.method != "dsnot" else "wanda")
-        print(f"DSnoT ppl          {perplexity(model, ds, ev):8.2f}   ({time.time()-t0:.0f}s)")
+        with _phase("phase/baseline", which="dsnot") as sp:
+            _, ds = prune(model, params, calib, method="dsnot",
+                          sparsity=args.sparsity, pattern=pattern,
+                          dsnot_init=args.method if args.method != "dsnot" else "wanda")
+            ppl["DSnoT"] = perplexity(model, ds, ev)
+        phases["baseline_dsnot"] = sp.duration
+        say(f"DSnoT ppl          {ppl['DSnoT']:8.2f}   ({sp.duration:.0f}s)")
     if "mask" in wants:
-        t0 = time.time()
-        mt, _ = mask_tuning.finetune_masks(model, params, masks,
-                                           args.sparsity, calib, pattern=pattern)
-        print(f"mask-tune ppl      {perplexity(model, mt, ev):8.2f}   ({time.time()-t0:.0f}s)")
+        with _phase("phase/baseline", which="mask") as sp:
+            mt, _ = mask_tuning.finetune_masks(model, params, masks,
+                                               args.sparsity, calib, pattern=pattern)
+            ppl["mask-tune"] = perplexity(model, mt, ev)
+        phases["baseline_mask"] = sp.duration
+        say(f"mask-tune ppl      {ppl['mask-tune']:8.2f}   ({sp.duration:.0f}s)")
     if "lora" in wants:
-        t0 = time.time()
-        it = corpus_iterator(corpus, batch=8, seq_len=args.seq, seed=9)
-        lr_params = lora.finetune_lora(model, pruned, masks, it,
-                                       lora.LoRAConfig(steps=200, lr=1e-3))
-        print(f"LoRA ppl           {perplexity(model, lr_params, ev):8.2f}   ({time.time()-t0:.0f}s)")
+        with _phase("phase/baseline", which="lora") as sp:
+            it = corpus_iterator(corpus, batch=8, seq_len=args.seq, seed=9)
+            lr_params = lora.finetune_lora(model, pruned, masks, it,
+                                           lora.LoRAConfig(steps=200, lr=1e-3))
+            ppl["LoRA"] = perplexity(model, lr_params, ev)
+        phases["baseline_lora"] = sp.duration
+        say(f"LoRA ppl           {ppl['LoRA']:8.2f}   ({sp.duration:.0f}s)")
+
+    if run is not None:
+        peak = OM.summary().get("ebft/live_block_bytes", {}).get("max")
+        path = args.bench_out
+        run.finish(
+            extra={
+                "phases": phases,
+                "blocks": [r.asdict() for r in reports],
+                "perplexity": ppl,
+                "ebft": {
+                    "num_blocks": len(reports),
+                    "mean_e_drop": mean_drop,
+                    "peak_live_block_bytes": peak,
+                    "early_stops": {
+                        reason: sum(1 for r in reports if r.early_stop == reason)
+                        for reason in {r.early_stop for r in reports}
+                    },
+                },
+            },
+            summary_path=path,
+        )
+        print(f"wrote {path}  (render with: python -m repro.obs report {path})")
 
 
 if __name__ == "__main__":

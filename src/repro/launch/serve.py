@@ -20,6 +20,8 @@ from repro.configs import get_config
 from repro.core.masks import prune
 from repro.data.tokens import CorpusConfig, SyntheticCorpus, calibration_set
 from repro.models.model import build
+from repro.obs import metrics as OM
+from repro.obs.run import start_run
 from repro.serving.decode import Request, Server
 
 
@@ -35,7 +37,18 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-obs", action="store_true",
+                    help="disable observability (no artifact, no metrics)")
+    ap.add_argument("--bench-out", default="",
+                    help="optional run-artifact path (JSON summary)")
     args = ap.parse_args()
+
+    run = None
+    if not args.no_obs:
+        run = start_run("serve", config=args.arch,
+                        sparsity=args.sparse or None,
+                        extra_manifest={"batch_slots": args.batch,
+                                        "requests": args.requests})
 
     cfg = get_config(args.arch)
     model = build(cfg)
@@ -60,15 +73,22 @@ def main() -> None:
     ]
     server = Server(model, params, batch_size=args.batch,
                     max_len=args.max_len, temperature=args.temperature)
-    t0 = time.time()
+    t0 = time.perf_counter()
     results = server.serve(reqs)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     toks = sum(len(v) for v in results.values())
     print(f"served {len(results)} requests, {toks} tokens in {dt:.1f}s "
           f"({toks / max(dt, 1e-9):.1f} tok/s, continuous batching over "
           f"{args.batch} slots)")
     for uid in sorted(results)[:3]:
         print(f"  req {uid}: {results[uid][:8]}...")
+    if run is not None:
+        occ = OM.summary().get("serve/batch_occupancy", {})
+        print(f"  mean batch occupancy "
+              f"{(occ.get('mean') or 0.0) * 100:.0f}% over {args.batch} slots")
+        run.finish(extra={"served": {"requests": len(results), "tokens": toks,
+                                     "tokens_per_s": toks / max(dt, 1e-9)}},
+                   summary_path=args.bench_out or None)
 
 
 if __name__ == "__main__":

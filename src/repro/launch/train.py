@@ -30,6 +30,8 @@ from repro.distributed import sharding as SH
 from repro.launch import steps as ST
 from repro.launch.mesh import make_debug_mesh
 from repro.models.model import build
+from repro.obs.profile import profiled
+from repro.obs.run import start_run
 from repro.optim.optimizers import adamw
 from repro.optim.schedules import warmup_cosine
 from repro.training.train_loop import Trainer, make_train_step
@@ -50,7 +52,17 @@ def main() -> None:
     ap.add_argument("--data", type=int, default=0, help="data-axis size (0=auto)")
     ap.add_argument("--model-axis", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-obs", action="store_true",
+                    help="disable observability (no artifact, no metrics)")
+    ap.add_argument("--bench-out", default="",
+                    help="optional run-artifact path (JSON summary)")
     args = ap.parse_args()
+
+    run = None
+    if not args.no_obs:
+        run = start_run("train", config=args.arch,
+                        extra_manifest={"steps": args.steps,
+                                        "batch": args.batch, "seq": args.seq})
 
     cfg = get_config(args.arch)
     model = build(cfg)
@@ -78,7 +90,8 @@ def main() -> None:
         if args.compress < 1.0:
             from repro.optim.grad_compress import init_error_state
             err_state = init_error_state(params)
-        jitted = jax.jit(step_fn)
+        # profiled: records compile time vs execution time (no-op when off)
+        jitted = profiled(jax.jit(step_fn), "train/step")
 
         # deterministic data order: batch is a pure function of step, so any
         # host can recompute it after restart (straggler/fault tolerance).
@@ -121,16 +134,23 @@ def main() -> None:
             ckpt_every=args.ckpt_every,
             log_every=10,
         )
-        t0 = time.time()
+        t0 = time.perf_counter()
         params, opt_state, history = trainer.run(
             params, opt_state, start, args.steps - start, err_state
         )
         CK.wait_all()
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         for s, l in history[-5:]:
             print(f"step {s:5d} loss {l:.4f}")
         print(f"{args.steps - start} steps in {dt:.1f}s "
               f"({(args.steps - start) / max(dt, 1e-9):.2f} steps/s)")
+        if run is not None:
+            run.finish(
+                extra={"trained": {"steps": args.steps - start, "seconds": dt,
+                                   "steps_per_s": (args.steps - start) / max(dt, 1e-9),
+                                   "history": history}},
+                summary_path=args.bench_out or None,
+            )
 
 
 if __name__ == "__main__":

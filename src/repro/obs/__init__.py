@@ -1,0 +1,48 @@
+"""repro.obs — tracing, metrics, and profiling for the EBFT pipeline.
+
+The paper's headline claims are operational (one live block, ~30 min
+walks, 16 GB peak), so the pipeline needs to be *observable*: this
+package provides the three primitives every driver/benchmark uses
+instead of ``print()`` + ``time.time()`` (DESIGN.md §8,
+docs/OBSERVABILITY.md):
+
+  * :mod:`repro.obs.trace`   — nested wall-time spans with optional
+    ``jax.block_until_ready`` fencing, so device work is attributed to
+    the span that launched it::
+
+        from repro.obs import trace
+        with trace.span("ebft/block", index=i) as sp:
+            out = sp.fence(step(...))   # device fence at attribution point
+
+  * :mod:`repro.obs.metrics` — counters / gauges / histograms /
+    time-series with a JSON summary and JSONL event stream::
+
+        from repro.obs import metrics
+        metrics.counter("serve/tokens").inc(n)
+        metrics.gauge("ebft/live_block_bytes").set(b)   # tracks max = peak
+
+  * :mod:`repro.obs.profile` — compile-vs-execute timing for jitted
+    steps, analytic FLOPs/bytes accounting for the Pallas kernels
+    (roofline model from :mod:`repro.launch.rooflines`), and pytree
+    byte/param accounting for the paper's live-block-memory claim.
+
+Everything is **off by default**: the module-level tracer/registry are
+null singletons whose methods allocate nothing, so instrumentation in
+hot paths is free until :func:`repro.obs.run.start_run` swaps in live
+objects. Instrumentation is host-side only — spans and metric updates
+must never be traced into jitted code (kernel hooks skip themselves
+when they see abstract tracers).
+
+``python -m repro.obs report <artifact>`` renders a run's trace tree
+and metric summaries; ``... validate`` checks the manifest schema (the
+CI gate for ``BENCH_ebft.json``).
+"""
+from __future__ import annotations
+
+from repro.obs import metrics, profile, trace  # noqa: F401  (public facades)
+from repro.obs.run import Run, current_run, start_run  # noqa: F401
+
+
+def enabled() -> bool:
+    """True when a live run is collecting (the null tracer reports False)."""
+    return trace.enabled()

@@ -1,0 +1,68 @@
+"""CLI: ``python -m repro.obs {report,validate} <artifact>``.
+
+``report`` renders a run artifact (JSON summary or JSONL event stream)
+as a text trace tree + metric summary, or re-emits it as JSON with
+``--json``. ``validate`` checks the manifest schema and any required
+top-level keys — the CI gate for ``BENCH_ebft.json``::
+
+    python -m repro.obs report BENCH_ebft.json
+    python -m repro.obs validate BENCH_ebft.json --require blocks phases
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.obs.report import render_text
+from repro.obs.run import validate_payload
+from repro.obs.sinks import load_artifact
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="Render and validate repro.obs run artifacts "
+                    "(docs/OBSERVABILITY.md).",
+    )
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    rp = sub.add_parser("report", help="render a run artifact")
+    rp.add_argument("artifact", help="JSON summary or JSONL event stream")
+    rp.add_argument("--json", action="store_true",
+                    help="emit the loaded payload as JSON instead of text")
+
+    vp = sub.add_parser("validate", help="schema-check a run artifact")
+    vp.add_argument("artifact")
+    vp.add_argument("--require", nargs="*", default=[], metavar="KEY",
+                    help="top-level keys the artifact must carry "
+                         "(e.g. blocks phases)")
+
+    args = ap.parse_args(argv)
+    try:
+        payload = load_artifact(args.artifact)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"error: cannot load {args.artifact}: {e}", file=sys.stderr)
+        return 2
+
+    if args.cmd == "report":
+        try:
+            if args.json:
+                print(json.dumps(payload, indent=2))
+            else:
+                print(render_text(payload))
+        except BrokenPipeError:  # report | head is the expected use
+            sys.stderr.close()
+        return 0
+
+    problems = validate_payload(payload, require=args.require)
+    if problems:
+        for p in problems:
+            print(f"INVALID {args.artifact}: {p}")
+        return 1
+    print(f"OK {args.artifact}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,11 +13,16 @@ per (batch, len) bucket.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs import metrics as OM
+from repro.obs import trace as OT
+from repro.obs.profile import profiled
 
 
 @dataclasses.dataclass
@@ -36,8 +41,10 @@ class Server:
         self.max_len = max_len
         self.temperature = temperature
 
-        self._prefill = jax.jit(model.prefill)
-        self._decode = jax.jit(model.decode_step)
+        # profiled: compile time vs execution time per (batch, len) bucket
+        # (zero-overhead passthrough while observability is off)
+        self._prefill = profiled(jax.jit(model.prefill), "serve/prefill")
+        self._decode = profiled(jax.jit(model.decode_step), "serve/decode")
 
     def _sample(self, logits: jax.Array, rng) -> jax.Array:
         logits = logits[:, -1]
@@ -79,6 +86,9 @@ class Server:
         state = self.model.init_serve_state(self.B, self.max_len)
         last_tok = jnp.zeros((self.B, 1), jnp.int32)
         rng = jax.random.PRNGKey(seed)
+        obs_on = OT.enabled()
+        tokens_out = 0
+        t_start = time.perf_counter()
 
         def admit():
             nonlocal state, last_tok
@@ -100,24 +110,39 @@ class Server:
                     req.out.append(tok)
                     last_tok = last_tok.at[slot, 0].set(tok)
                     remaining[slot] -= 1
+            if obs_on:
+                OM.gauge("serve/queue_depth").set(len(queue))
 
-        admit()
-        while any(a is not None for a in active):
-            rng, sub = jax.random.split(rng)
-            logits, state = self._decode(self.params, last_tok, state)
-            tok = self._sample(logits, sub)
-            for slot in range(self.B):
-                req = active[slot]
-                if req is None:
-                    continue
-                t = int(tok[slot])
-                req.out.append(t)
-                remaining[slot] -= 1
-                if remaining[slot] <= 0:
-                    results[req.uid] = req.out
-                    active[slot] = None
-            last_tok = tok[:, None].astype(jnp.int32)
+        with OT.span("serve/batch", requests=len(requests), slots=self.B):
             admit()
+            while any(a is not None for a in active):
+                if obs_on:
+                    # occupancy: fraction of slots doing useful decode work
+                    OM.histogram("serve/batch_occupancy").observe(
+                        sum(1 for a in active if a is not None) / self.B
+                    )
+                rng, sub = jax.random.split(rng)
+                logits, state = self._decode(self.params, last_tok, state)
+                tok = self._sample(logits, sub)
+                for slot in range(self.B):
+                    req = active[slot]
+                    if req is None:
+                        continue
+                    t = int(tok[slot])
+                    req.out.append(t)
+                    remaining[slot] -= 1
+                    tokens_out += 1
+                    if remaining[slot] <= 0:
+                        results[req.uid] = req.out
+                        active[slot] = None
+                last_tok = tok[:, None].astype(jnp.int32)
+                admit()
+            if obs_on:
+                dt = time.perf_counter() - t_start
+                tokens_out += len(results)  # one prefill token per request
+                OM.counter("serve/tokens").inc(tokens_out)
+                OM.counter("serve/requests").inc(len(results))
+                OM.gauge("serve/tokens_per_s").set(tokens_out / max(dt, 1e-9))
         return results
 
 

@@ -22,6 +22,8 @@ from typing import Any, Callable, Dict, Iterator, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.obs import metrics as OM
+from repro.obs import trace as OT
 from repro.optim import grad_compress as GC
 from repro.optim.optimizers import Optimizer, apply_updates, clip_by_global_norm
 
@@ -99,22 +101,30 @@ class Trainer:
 
         history = []
         step = start_step
-        for step in range(start_step, start_step + num_steps):
-            batch = self.data_fn(step)  # pure function of step: any host can
-            # recompute it after a restart — stragglers/failures just rejoin.
-            params, opt_state, metrics, err_state = self.step_fn(
-                params, opt_state, batch, err_state
-            )
-            if step % self.log_every == 0:
-                loss = float(metrics["loss"])
-                history.append((step, loss))
-            if self.ckpt_dir and (step + 1) % self.ckpt_every == 0:
-                CK.save(
-                    self.ckpt_dir,
-                    {"params": params, "opt_state": opt_state},
-                    step=step + 1,
-                    async_write=True,
+        with OT.span("train/run", start=start_step, steps=num_steps):
+            for step in range(start_step, start_step + num_steps):
+                batch = self.data_fn(step)  # pure function of step: any host
+                # can recompute it after a restart — failures just rejoin.
+                params, opt_state, metrics, err_state = self.step_fn(
+                    params, opt_state, batch, err_state
                 )
+                OM.counter("train/steps").inc()
+                if step % self.log_every == 0:
+                    loss = float(metrics["loss"])
+                    history.append((step, loss))
+                    OM.series("train/loss").append(loss, step=step)
+                    if "grad_norm" in metrics:
+                        OM.series("train/grad_norm").append(
+                            float(metrics["grad_norm"]), step=step
+                        )
+                if self.ckpt_dir and (step + 1) % self.ckpt_every == 0:
+                    with OT.span("train/checkpoint", step=step + 1):
+                        CK.save(
+                            self.ckpt_dir,
+                            {"params": params, "opt_state": opt_state},
+                            step=step + 1,
+                            async_write=True,
+                        )
         if self.ckpt_dir:
             # drain in-flight async writes first: a periodic save of this
             # same step may still be writing its .tmp — racing a second

@@ -19,6 +19,7 @@ from repro.analysis.config_check import (
 from repro.analysis.jaxpr_lint import lint_jaxpr
 from repro.analysis.kernel_check import check_config_kernels, matmul_workloads
 from repro.analysis.mask_check import check_mask_tree, check_masked_fn
+from repro.analysis.source_lint import check_sources
 from repro.configs import get_config
 from repro.kernels.validation import (
     BlockUse,
@@ -327,12 +328,56 @@ def test_hlo_check_clean_on_tiled_groups():
 
 
 # ---------------------------------------------------------------------------
+# source_lint
+# ---------------------------------------------------------------------------
+def test_source_lint_flags_seeded_violations(tmp_path):
+    core = tmp_path / "core"
+    core.mkdir()
+    (core / "hot.py").write_text(
+        "import time\n"
+        "t0 = time.time()\n"              # OBS002
+        "print('debug')\n"                # OBS001 (hot path)
+        "# print('in a comment is fine')\n"
+        "pprint(x)\n"                     # not print()
+        "obj.print()\n"                   # method call, not builtin
+    )
+    launch = tmp_path / "launch"
+    launch.mkdir()
+    (launch / "cli.py").write_text(
+        "print('drivers may print')\n"
+        "import time; t = time.time()\n"  # OBS002 applies everywhere
+    )
+    findings = check_sources(src_root=str(tmp_path))
+    got = codes(findings)
+    assert got == {"OBS001", "OBS002"}
+    obs1 = [f for f in findings if f.code == "OBS001"]
+    assert len(obs1) == 1 and "core/hot.py:3" in obs1[0].location
+    obs2 = [f for f in findings if f.code == "OBS002"]
+    assert len(obs2) == 2
+    assert not errors(findings)  # hygiene findings are warn-severity
+
+
+def test_source_lint_clean_tree_and_real_repo(tmp_path):
+    obs = tmp_path / "obs"
+    obs.mkdir()
+    (obs / "impl.py").write_text("import time\nnow = time.time()\n")
+    clean = tmp_path / "core"
+    clean.mkdir()
+    (clean / "ok.py").write_text("import time\nt = time.perf_counter()\n")
+    assert check_sources(src_root=str(tmp_path)) == []
+    # the shipped tree itself must stay clean (this is the CI invariant)
+    assert check_sources() == []
+
+
+# ---------------------------------------------------------------------------
 # orchestrator + CLI
 # ---------------------------------------------------------------------------
 def test_run_clean_on_tiny_config():
     report = run(config_names=["tiny_dense"])
     assert report.exit_code("error") == 0
-    assert report.passes_run == ["kernels", "masks", "jaxpr", "sharding"]
+    assert report.passes_run == [
+        "kernels", "masks", "jaxpr", "sharding", "source_lint"
+    ]
     assert report.configs_checked == ["tiny_dense"]
 
 
