@@ -79,10 +79,14 @@ def standard_sets(model, n_calib: int = 64, seq: int = 128):
     )
 
 
-def run_ebft(model, dense, pruned, masks, calib, epochs: int = 8):
-    ecfg = ebft.EBFTConfig(lr=EBFT_LR, epochs=epochs, microbatch=8, patience=3)
+def run_ebft(model, dense, pruned, masks, calib, epochs: int = 8,
+             fused_epochs: bool = True, prefetch_depth: int = 1):
+    ecfg = ebft.EBFTConfig(lr=EBFT_LR, epochs=epochs, microbatch=8, patience=3,
+                           fused_epochs=fused_epochs,
+                           prefetch_depth=prefetch_depth)
     t0 = time.perf_counter()
-    with OT.span("bench/ebft", epochs=epochs, lr=EBFT_LR) as sp:
+    with OT.span("bench/ebft", epochs=epochs, lr=EBFT_LR,
+                 fused=fused_epochs, prefetch=prefetch_depth) as sp:
         tuned, reports = ebft.finetune(model, dense, pruned, masks, calib, ecfg)
         sp.fence(tuned)
     elapsed = time.perf_counter() - t0

@@ -1,8 +1,10 @@
-"""Source-hygiene pass: keep ad-hoc I/O and clocks out of hot paths.
+"""Source-hygiene pass: keep ad-hoc I/O, clocks, and host syncs out of
+hot paths.
 
 With the observability layer in place (docs/OBSERVABILITY.md), library
 code under ``src/repro`` must not reach for ``print()`` or
-``time.time()`` directly:
+``time.time()`` directly, and hot loops must not force device→host
+round-trips:
 
   * ``print()`` in a hot-path package (OBS001) bypasses the sink model —
     output is invisible to artifacts and un-silenceable in benchmarks.
@@ -12,6 +14,13 @@ code under ``src/repro`` must not reach for ``print()`` or
     clock for measurement — it is not monotonic (NTP steps produce
     negative durations). Spans use ``time.perf_counter``; wall-clock
     timestamps belong in the run manifest only.
+  * ``float(...)`` / ``np.asarray(...)`` inside a ``for``/``while`` loop
+    in a hot-path package (OBS003) is a per-iteration host sync: each
+    call blocks the host on the device stream and collapses jax's async
+    dispatch into lock-step. Reduce on device and transfer one scalar
+    after the loop (docs/PERF.md) — or, where the sync is the point
+    (host-side convergence checks, user-requested logging), annotate the
+    line or the line above it with ``obs: sync-ok`` and a reason.
 
 The pass is config-independent: it scans the source tree once per
 analysis run, skipping ``repro.obs`` (it *implements* the clocks/sinks)
@@ -25,8 +34,9 @@ from typing import List, Optional
 
 from repro.analysis.findings import Finding
 
-# packages where print() is a finding; launch/ and configs/ are CLIs and
-# declarative tables — console output is legitimate there.
+# packages where print() / in-loop host syncs are findings; launch/ and
+# configs/ are CLIs and declarative tables — console output is legitimate
+# there.
 HOT_PATH_DIRS = (
     "core", "training", "serving", "kernels", "optim", "sparsity",
     "models", "distributed", "checkpoint", "data",
@@ -37,6 +47,9 @@ EXCLUDE_DIRS = ("obs", "analysis")
 
 _PRINT = re.compile(r"(?<![\w.])print\s*\(")
 _TIME_TIME = re.compile(r"(?<![\w.])time\.time\s*\(")
+_HOST_SYNC = re.compile(r"(?<![\w.])(?:float|np\.asarray)\s*\(")
+_LOOP_HEADER = re.compile(r"^\s*(?:for|while)\b.*:")
+_SYNC_OK = "obs: sync-ok"
 
 
 def _code_part(line: str) -> str:
@@ -55,10 +68,16 @@ def _scan_file(path: str, rel: str, in_hot_path: bool) -> List[Finding]:
             lines = f.readlines()
     except OSError:
         return findings
+    loop_indents: List[int] = []  # indents of the enclosing loop headers
+    prev_sync_ok = False
     for lineno, raw in enumerate(lines, start=1):
         line = _code_part(raw)
-        if not line:
+        if not line.strip():
+            prev_sync_ok = prev_sync_ok or _SYNC_OK in raw
             continue
+        indent = len(line) - len(line.lstrip())
+        while loop_indents and indent <= loop_indents[-1]:
+            loop_indents.pop()
         where = f"{rel}:{lineno}"
         if in_hot_path and _PRINT.search(line):
             findings.append(Finding(
@@ -74,6 +93,19 @@ def _scan_file(path: str, rel: str, in_hot_path: bool) -> List[Finding]:
                 message="time.time() is non-monotonic; use "
                         "time.perf_counter() (or an obs span) for timing",
             ))
+        if (in_hot_path and loop_indents and _HOST_SYNC.search(line)
+                and _SYNC_OK not in raw and not prev_sync_ok):
+            findings.append(Finding(
+                code="OBS003", severity="warn", pass_name="source_lint",
+                location=where,
+                message="float()/np.asarray() inside a loop forces a "
+                        "device→host sync per iteration; reduce on device "
+                        "and transfer once after the loop, or annotate "
+                        "'obs: sync-ok <reason>'",
+            ))
+        if _LOOP_HEADER.match(line):
+            loop_indents.append(indent)
+        prev_sync_ok = _SYNC_OK in raw
     return findings
 
 

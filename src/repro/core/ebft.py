@@ -15,9 +15,23 @@ get exactly zero gradient by the chain rule.
 
 Streaming property (the paper's 16 GB claim): only one block's weights +
 optimizer moments are live at a time; the teacher/student streams advance
-microbatch-wise. On the pod this block-locality becomes a pipelining
-opportunity (DESIGN.md §3) — block l+1's teacher stream can be produced
-while block l fine-tunes.
+microbatch-wise. The walk realizes the DESIGN.md §3 pipelining: block
+l+1's teacher stream is dispatched while block l fine-tunes
+(core/pruning/common.py, ``TeacherPrefetcher``).
+
+The per-block tuning loop itself is FUSED (``fused_epochs``, default on):
+each block's microbatches are stacked along a leading axis and the whole
+epoch budget runs as one jitted ``lax.scan`` over epochs (inner scan over
+microbatches), with the plateau early-stop evaluated on device
+(``plateau_early_stop_device``) via ``lax.cond`` — converged blocks skip
+their remaining epochs without a host round-trip. Block weights are
+DONATED into the fused call, so weights and Adam moments update in place
+and the measured ``live_block_bytes`` stays one-block-sized. The host
+syncs once per block (one ``device_get`` of scalars + the loss history)
+instead of once per microbatch-step: ≤ 3 tune-path dispatches and 1 host
+sync per block, vs. epochs × microbatches + 2 × microbatches before
+(docs/PERF.md has the accounting). Ragged microbatch shapes fall back to
+the legacy per-step loop.
 
 Zamba2's shared attention block (one weight set, G invocation sites) is
 fine-tuned once on the *sum* of its per-site reconstruction errors
@@ -37,9 +51,9 @@ from repro.core import reconstruction as R
 from repro.core.pruning import common as C
 from repro.obs import metrics as OM
 from repro.obs import trace as OT
-from repro.obs.profile import ebft_live_block_bytes
+from repro.obs.profile import DispatchLedger, ebft_live_block_bytes
 from repro.optim.optimizers import adam, apply_updates
-from repro.optim.schedules import plateau_early_stop
+from repro.optim.schedules import plateau_early_stop, plateau_early_stop_device
 from repro.sparsity.sparse_params import apply_masks
 
 Params = Any
@@ -53,6 +67,8 @@ class EBFTConfig:
     patience: int = 2         # early stop when loss plateaus (paper: "converged")
     rel_tol: float = 1e-3
     seed: int = 0
+    fused_epochs: bool = True  # one scanned+donated dispatch per block
+    prefetch_depth: int = 1    # teacher stream dispatched this many blocks ahead
 
 
 @dataclasses.dataclass
@@ -65,6 +81,9 @@ class BlockReport:
     early_stop: str = "max_epochs"   # "plateau" | "max_epochs"
     history: List[float] = dataclasses.field(default_factory=list)
     live_bytes: int = 0              # weights + masks + f32 Adam moments
+    path: str = "fused"              # "fused" | "legacy"
+    dispatches: int = 0              # tune-path device dispatches for this block
+    host_syncs: int = 0              # tune-path device→host syncs for this block
 
     def asdict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -72,8 +91,9 @@ class BlockReport:
 
 # ---------------------------------------------------------------------------
 def _make_tune_step(model, kind_rep_i: int, ecfg: EBFTConfig):
-    """One Adam step on a block's weights against Eq. 4. Compiled once per
-    block *kind* (same shapes ⇒ same executable for every layer)."""
+    """Per-block-kind executables (same shapes ⇒ same executable for every
+    layer of the kind): the legacy per-microbatch ``step``/``eval_loss``
+    pair and the fused whole-block ``fused_run``."""
     opt = adam(ecfg.lr)
 
     def loss_fn(bw, mask_bp, h, target, pos, aux):
@@ -91,7 +111,86 @@ def _make_tune_step(model, kind_rep_i: int, ecfg: EBFTConfig):
     def eval_loss(bw, mask_bp, h, target, pos, aux):
         return loss_fn(bw, mask_bp, h, target, pos, aux)
 
-    return opt, step, eval_loss
+    # -- the fused path: whole tuning loop in one donated dispatch ---------
+    E, patience, rel_tol = ecfg.epochs, ecfg.patience, ecfg.rel_tol
+
+    def fused_run(bw, mask_bp, h_st, target_st, pos_st, aux_st):
+        data = (h_st, target_st, pos_st, aux_st)
+        n_mb = h_st.shape[0]
+
+        def eval_mean(bw_):
+            def body(acc, mb):
+                h, t, p, a = mb
+                return acc + loss_fn(bw_, mask_bp, h, t, p, a), None
+
+            tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), data)
+            return tot / n_mb
+
+        before = eval_mean(bw)
+        opt_state = opt.init(bw)
+        hist = jnp.full((E + 1,), jnp.inf, jnp.float32).at[0].set(before)
+
+        def mb_step(carry, mb):
+            bw_, opt_state_ = carry
+            h, t, p, a = mb
+            loss, g = vg(bw_, mask_bp, h, t, p, a)
+            upd, opt_state_ = opt.update(g, opt_state_, bw_)
+            return (apply_updates(bw_, upd), opt_state_), loss
+
+        def epoch_body(carry, e):
+            bw_, opt_state_, hist_, n_run, plateaued = carry
+
+            def live(operand):
+                bw_, opt_state_, hist_, n_run = operand
+                (bw_, opt_state_), losses = jax.lax.scan(
+                    mb_step, (bw_, opt_state_), data
+                )
+                mean = jnp.mean(losses)
+                hist_ = hist_.at[e + 1].set(mean)
+                n_run = n_run + 1
+                stop = plateau_early_stop_device(
+                    hist_, n_run + 1, patience, rel_tol
+                )
+                return bw_, opt_state_, hist_, n_run, stop
+
+            def skip(operand):
+                bw_, opt_state_, hist_, n_run = operand
+                return bw_, opt_state_, hist_, n_run, jnp.asarray(True)
+
+            out = jax.lax.cond(
+                plateaued, skip, live, (bw_, opt_state_, hist_, n_run)
+            )
+            return out, None
+
+        init = (bw, opt_state, hist, jnp.zeros((), jnp.int32),
+                jnp.asarray(False))
+        (bw, _, hist, n_run, plateaued), _ = jax.lax.scan(
+            epoch_body, init, jnp.arange(E)
+        )
+        after = eval_mean(bw)
+        bw = apply_masks(bw, mask_bp)
+        return bw, before, after, hist, n_run, plateaued
+
+    # donate bw: weights + (internal) Adam moments update in place, so the
+    # live-block footprint stays at one block (the paper's 16 GB property)
+    fused = jax.jit(fused_run, donate_argnums=(0,))
+    return opt, step, eval_loss, fused
+
+
+def _stack_microbatches(data: List[Tuple]):
+    """[(h, target, pos, aux), ...] -> one stacked pytree tuple with a
+    leading microbatch axis, or None when shapes are ragged (the fused
+    scan needs a uniform leading axis)."""
+    if not data:
+        return None
+    leaves0, treedef0 = jax.tree.flatten(data[0])
+    sig0 = [(jnp.shape(x), jnp.result_type(x)) for x in leaves0]
+    for mb in data[1:]:
+        leaves, treedef = jax.tree.flatten(mb)
+        if treedef != treedef0 \
+                or [(jnp.shape(x), jnp.result_type(x)) for x in leaves] != sig0:
+            return None
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *data)
 
 
 def tune_block(
@@ -102,32 +201,25 @@ def tune_block(
     data: List[Tuple],  # [(h, target, pos, aux), ...] microbatches
     ecfg: EBFTConfig,
     step_cache: Dict,
+    stacked: Optional[Tuple] = None,  # pre-stacked (h, target, pos, aux)
 ) -> Tuple[Params, BlockReport]:
     kind = R.block_kind(model, i)
     if kind not in step_cache:
         step_cache[kind] = _make_tune_step(model, i, ecfg)
-    opt, step, eval_loss = step_cache[kind]
+    opt, step, eval_loss, fused = step_cache[kind]
+    ledger = DispatchLedger("ebft/tune")
 
     with OT.span("ebft/block", index=i, kind=kind) as sp:
-        before = float(
-            np.mean([float(eval_loss(bp, mask_bp, *mb)) for mb in data])
-        )
-        opt_state = opt.init(bp)
-        history: List[float] = [before]
-        epochs_run = 0
-        early_stop = "max_epochs"
-        for _ in range(ecfg.epochs):
-            ep = 0.0
-            for mb in data:
-                bp, opt_state, loss = step(bp, opt_state, mask_bp, *mb)
-                ep += float(loss)
-            epochs_run += 1
-            history.append(ep / max(len(data), 1))
-            if plateau_early_stop(history, ecfg.patience, ecfg.rel_tol):
-                early_stop = "plateau"
-                break
-        after = float(np.mean([float(eval_loss(bp, mask_bp, *mb)) for mb in data]))
-        bp = apply_masks(bp, mask_bp)
+        if ecfg.fused_epochs and stacked is None:
+            stacked = _stack_microbatches(data)
+        if ecfg.fused_epochs and stacked is not None:
+            bp, report = _tune_block_fused(
+                i, kind, bp, mask_bp, stacked, fused, ledger
+            )
+        else:
+            bp, report = _tune_block_legacy(
+                i, kind, bp, mask_bp, data, ecfg, opt, step, eval_loss, ledger
+            )
 
         live = 0
         if OT.enabled():
@@ -135,14 +227,89 @@ def tune_block(
             # masks, and Adam moments are optimizer-live right now
             live = ebft_live_block_bytes(bp, mask_bp)
             OM.gauge("ebft/live_block_bytes").set(live)  # summary max = peak
-            OM.series("ebft/loss_before").append(before, step=i)
-            OM.series("ebft/loss_after").append(after, step=i)
-            OM.series("ebft/epochs_run").append(epochs_run, step=i)
-            OM.counter(f"ebft/early_stop/{early_stop}").inc()
-            sp.set(epochs=epochs_run, loss_before=before, loss_after=after,
-                   early_stop=early_stop, live_bytes=live)
-    return bp, BlockReport(i, kind, epochs_run, before, after,
-                           early_stop, history, live)
+            OM.series("ebft/loss_before").append(report.loss_before, step=i)
+            OM.series("ebft/loss_after").append(report.loss_after, step=i)
+            OM.series("ebft/epochs_run").append(report.epochs_run, step=i)
+            OM.series("ebft/dispatches_per_block").append(
+                report.dispatches, step=i
+            )
+            OM.series("ebft/host_syncs_per_block").append(
+                report.host_syncs, step=i
+            )
+            OM.counter(f"ebft/early_stop/{report.early_stop}").inc()
+            sp.set(epochs=report.epochs_run, loss_before=report.loss_before,
+                   loss_after=report.loss_after, early_stop=report.early_stop,
+                   live_bytes=live, path=report.path,
+                   dispatches=report.dispatches, host_syncs=report.host_syncs)
+        report.live_bytes = live
+    return bp, report
+
+
+def _tune_block_fused(
+    i: int, kind: str, bp: Params, mask_bp: Params, stacked: Tuple,
+    fused: Callable, ledger: DispatchLedger,
+) -> Tuple[Params, BlockReport]:
+    """One donated dispatch for the whole block; one host sync for the
+    scalars + loss history."""
+    h_st, target_st, pos_st, aux_st = stacked
+    bp, before_d, after_d, hist_d, n_run_d, plateaued_d = fused(
+        bp, mask_bp, h_st, target_st, pos_st, aux_st
+    )
+    ledger.dispatch()
+    before, after, hist, epochs_run, plateaued = jax.device_get(
+        (before_d, after_d, hist_d, n_run_d, plateaued_d)
+    )
+    ledger.host_sync()
+    epochs_run = int(epochs_run)
+    history = [float(v) for v in hist[: epochs_run + 1]]
+    early_stop = "plateau" if bool(plateaued) else "max_epochs"
+    return bp, BlockReport(
+        i, kind, epochs_run, float(before), float(after), early_stop,
+        history, 0, "fused", ledger.dispatches, ledger.host_syncs,
+    )
+
+
+def _tune_block_legacy(
+    i: int, kind: str, bp: Params, mask_bp: Params, data: List[Tuple],
+    ecfg: EBFTConfig, opt, step, eval_loss, ledger: DispatchLedger,
+) -> Tuple[Params, BlockReport]:
+    """Per-microbatch dispatch loop (ragged shapes / ``fused_epochs=False``).
+
+    Still avoids per-microbatch host syncs: per-epoch means are reduced on
+    device and transferred as one scalar (the plateau check is host-side
+    here, so one sync per epoch is the floor)."""
+
+    def eval_mean(bp_) -> float:
+        losses = [eval_loss(bp_, mask_bp, *mb) for mb in data]
+        ledger.dispatch(len(losses) + 1)
+        ledger.host_sync()
+        return float(jnp.mean(jnp.stack(losses)))  # obs: sync-ok (one scalar)
+
+    before = eval_mean(bp)
+    opt_state = opt.init(bp)
+    history: List[float] = [before]
+    epochs_run = 0
+    early_stop = "max_epochs"
+    for _ in range(ecfg.epochs):
+        losses = []
+        for mb in data:
+            bp, opt_state, loss = step(bp, opt_state, mask_bp, *mb)
+            losses.append(loss)
+        ledger.dispatch(len(losses) + 1)
+        ledger.host_sync()
+        epochs_run += 1
+        # obs: sync-ok (host-side plateau check needs the epoch mean)
+        history.append(float(jnp.mean(jnp.stack(losses))))
+        if plateau_early_stop(history, ecfg.patience, ecfg.rel_tol):
+            early_stop = "plateau"
+            break
+    after = eval_mean(bp)
+    bp = apply_masks(bp, mask_bp)
+    ledger.dispatch()
+    return bp, BlockReport(
+        i, kind, epochs_run, before, after, early_stop, history, 0,
+        "legacy", ledger.dispatches, ledger.host_syncs,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -159,7 +326,8 @@ def finetune(
     """The EBFT driver. Returns (fine-tuned sparse params, per-block reports)."""
     ecfg = ecfg or EBFTConfig()
     with OT.span("ebft/walk", epochs=ecfg.epochs, lr=ecfg.lr,
-                 microbatch=ecfg.microbatch):
+                 microbatch=ecfg.microbatch, fused=ecfg.fused_epochs,
+                 prefetch_depth=ecfg.prefetch_depth):
         student = apply_masks(pruned_params, masks)
         reports: List[BlockReport] = []
         step_cache: Dict = {}
@@ -177,7 +345,13 @@ def finetune(
             if i == shared_idx:
                 shared_sites.extend(data)  # tune once on the union (sum of sites)
                 return None
-            tuned, rep = tune_block(model, i, bp, mask_bp, data, ecfg, step_cache)
+            stacked = None
+            if "h_st" in ctx:
+                stacked = (ctx["h_st"], ctx["target_st"], ctx["pos_st"],
+                           ctx["aux_st"])
+            tuned, rep = tune_block(
+                model, i, bp, mask_bp, data, ecfg, step_cache, stacked=stacked
+            )
             reports.append(rep)
             if log:
                 log(
@@ -195,10 +369,14 @@ def finetune(
             extra_batch=extra_batch,
             params_student=student,
             dual_stream=True,
+            prefetch_depth=ecfg.prefetch_depth,
         )
 
         if shared_idx is not None and shared_sites:
-            bp = model.get_block(result, shared_idx)
+            # the shared block is stored un-stacked (model.get_block returns
+            # the leaves by reference, not a slice) — copy before the donated
+            # fused call so `result`'s own buffers are never invalidated
+            bp = jax.tree.map(jnp.copy, model.get_block(result, shared_idx))
             mask_bp = model.get_block(masks, shared_idx)
             tuned, rep = tune_block(
                 model, shared_idx, bp, mask_bp, shared_sites, ecfg, step_cache

@@ -25,16 +25,17 @@ def perplexity(
         loss, m = model.loss(p, batch)
         return m["nll"] if "nll" in m else loss
 
-    tot, n = 0.0, 0
+    # token-weighted NLL accumulates on device; one scalar sync at the end
+    tot, n = jnp.zeros((), jnp.float32), 0
     for s in range(0, tokens.shape[0], microbatch):
         batch = {"tokens": jnp.asarray(tokens[s : s + microbatch])}
         if extra_batch:
             for k, v in extra_batch.items():
                 batch[k] = jnp.asarray(v[s : s + microbatch])
         b = batch["tokens"].shape[0]
-        tot += float(nll(params, batch)) * b
+        tot = tot + nll(params, batch) * b
         n += b
-    return float(np.exp(tot / max(n, 1)))
+    return float(np.exp(float(tot) / max(n, 1)))
 
 
 def cloze_accuracy(
@@ -53,7 +54,8 @@ def cloze_accuracy(
     def last_logits(p, batch):
         return model.forward(p, batch)[:, -1]
 
-    correct, n = 0, 0
+    # hit counts accumulate on device; one scalar sync at the end
+    correct, n = jnp.zeros((), jnp.int32), 0
     for s in range(0, ctx.shape[0], microbatch):
         batch = {"tokens": jnp.asarray(ctx[s : s + microbatch])}
         if extra_batch:
@@ -63,6 +65,6 @@ def cloze_accuracy(
         t = jnp.asarray(true_next[s : s + microbatch])
         d = jnp.asarray(distract[s : s + microbatch])
         idx = jnp.arange(lg.shape[0])
-        correct += int(jnp.sum(lg[idx, t] > lg[idx, d]))
+        correct = correct + jnp.sum(lg[idx, t] > lg[idx, d])
         n += lg.shape[0]
-    return correct / max(n, 1)
+    return int(correct) / max(n, 1)

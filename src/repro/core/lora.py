@@ -115,5 +115,6 @@ def finetune_lora(
             batch.update({k: jnp.asarray(v) for k, v in extra_batch_fn(s).items()})
         lora, opt_state, loss = step(lora, opt_state, batch)
         if log and s % max(1, lcfg.steps // 10) == 0:
+            # obs: sync-ok (caller-requested logging, 1-in-10 cadence)
             log(f"lora step {s}: lm-loss {float(loss):.4f}")
     return merge(pruned_params, masks, lora, lcfg)

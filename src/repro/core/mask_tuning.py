@@ -145,11 +145,13 @@ def finetune_masks(
         data = list(zip(ctx["h_mb"], ctx["target_mb"], ctx["pos_mb"], ctx["aux_mb"]))
         history: List[float] = []
         for _ in range(ecfg.epochs):
-            ep = 0.0
+            losses = []
             for h, t, p, a in data:
                 scores, opt_state, loss = step(scores, opt_state, dense_bp, h, t, p, a)
-                ep += float(loss)
-            history.append(ep / max(len(data), 1))
+                losses.append(loss)
+            # epoch mean reduced on device; one scalar transfer per epoch
+            # obs: sync-ok (host-side plateau check needs the epoch mean)
+            history.append(float(jnp.mean(jnp.stack(losses))))
             if plateau_early_stop(history, ecfg.patience, ecfg.rel_tol):
                 break
         mask_bp = _final_masks(dense_bp, scores, sparsity, pattern)

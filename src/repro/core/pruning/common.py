@@ -137,6 +137,104 @@ def stats_for_leaf(stats: Dict[str, LeafStats], names: Tuple[str, ...]) -> Optio
 # ---------------------------------------------------------------------------
 # The block-by-block walk shared by the pruning drivers and EBFT.
 # ---------------------------------------------------------------------------
+class Unstacked:
+    """Lazy per-microbatch view over a stacked pytree.
+
+    The stacked walk keeps each stream as ONE device array with a leading
+    microbatch axis; list-consuming visitors (the pruning drivers,
+    mask-tuning) still read ``ctx["h_mb"][j]`` — each access slices on
+    demand, so visitors that only use the stacked form (fused EBFT) incur
+    zero per-microbatch dispatches.
+    """
+
+    __slots__ = ("tree", "n")
+
+    def __init__(self, tree, n: int):
+        self.tree = tree
+        self.n = n
+
+    def __len__(self) -> int:
+        return self.n
+
+    def __getitem__(self, j):
+        if not -self.n <= j < self.n:
+            raise IndexError(j)
+        return jax.tree.map(lambda a: a[j], self.tree)
+
+    def __iter__(self):
+        return (self[j] for j in range(self.n))
+
+
+def _uniform_microbatches(batch_all: List[Dict[str, jax.Array]]) -> bool:
+    """True when every microbatch has identical structure + leaf shapes
+    (the stacked/fused walk needs a uniform leading axis)."""
+    if not batch_all:
+        return False
+    leaves0, treedef0 = jax.tree.flatten(batch_all[0])
+    sig0 = [(x.shape, x.dtype) for x in leaves0]
+    for b in batch_all[1:]:
+        leaves, treedef = jax.tree.flatten(b)
+        if treedef != treedef0 or [(x.shape, x.dtype) for x in leaves] != sig0:
+            return False
+    return True
+
+
+class TeacherPrefetcher:
+    """Dispatch-ahead teacher stream for the dual-stream walk (DESIGN.md §3).
+
+    The teacher stream depends only on the frozen dense ``params``, never
+    on the student's updates, so block ``l+1..l+depth``'s teacher
+    activations can be *enqueued* while block ``l``'s student is still
+    fine-tuning — the teacher forward overlaps student backprop on the
+    device stream. ``get(k)`` fences (``block_until_ready``) at the
+    consume point, which both attributes the wait to the consumer and
+    back-pressures the queue: at most ``depth + 1`` blocks of teacher
+    activations are in flight, keeping the walk's streaming-memory
+    property intact.
+
+    ``depth=0`` degenerates to the strictly serial legacy order (compute
+    block ``l``'s targets immediately before visiting block ``l``).
+    """
+
+    def __init__(self, model, params, visits, adv_scan, ht_st, pos_st,
+                 aux_t_st, depth: int, ledger: Optional[Any] = None):
+        self.model = model
+        self.params = params
+        self.visits = visits
+        self.adv_scan = adv_scan
+        self.pos_st = pos_st
+        self.aux_t_st = aux_t_st
+        self.depth = max(int(depth), 0)
+        self.ledger = ledger
+        self._ht = ht_st                    # teacher stream BEFORE visit _next
+        self._targets: Dict[int, Any] = {}  # visit index -> stacked targets
+        self._next = 0
+
+    def _dispatch_until(self, k: int) -> None:
+        last = min(k, len(self.visits) - 1)
+        while self._next <= last:
+            i, _site = self.visits[self._next]
+            dense_bp = self.model.get_block(self.params, i)
+            t = self.adv_scan(dense_bp, self._ht, self.pos_st, self.aux_t_st, i)
+            if self.ledger is not None:
+                self.ledger.dispatch()
+            self._targets[self._next] = t
+            self._ht = t                    # Eq. 3: teacher feeds teacher
+            self._next += 1
+
+    def in_flight(self) -> int:
+        return len(self._targets)
+
+    def get(self, k: int):
+        """Teacher targets for visit ``k``, fenced at the consume point."""
+        self._dispatch_until(k + self.depth)
+        t = self._targets.pop(k)
+        jax.block_until_ready(t)
+        if self.ledger is not None:
+            self.ledger.host_sync()
+        return t
+
+
 def walk_blocks(
     model,
     params: Params,
@@ -146,6 +244,7 @@ def walk_blocks(
     extra_batch: Optional[Dict[str, np.ndarray]] = None,
     params_student: Optional[Params] = None,
     dual_stream: bool = False,
+    prefetch_depth: int = 0,
 ):
     """Block-by-block calibration walk.
 
@@ -157,14 +256,35 @@ def walk_blocks(
     Dual-stream mode (EBFT, Eq. 3/4): the teacher stream propagates through
     the dense ``params`` and the student stream through
     ``params_student``; visits see student inputs (``h_mb``) and pure
-    teacher outputs (``target_mb``).
+    teacher outputs (``target_mb``). When microbatch shapes are uniform
+    the streams are kept *stacked* (one device array with a leading
+    microbatch axis): each stream advance is ONE scanned dispatch per
+    block, the teacher stream is produced ``prefetch_depth`` blocks ahead
+    of the visitor (:class:`TeacherPrefetcher`), and visitors additionally
+    receive ``h_st/target_st/pos_st/aux_st`` stacked arrays so a fused
+    tuner never re-stacks. Ragged shapes fall back to the per-microbatch
+    list walk.
 
-    stream_ctx fields: h_mb, pos_mb, aux_mb, target_mb, site.
+    stream_ctx fields: h_mb, pos_mb, aux_mb, target_mb, site; stacked
+    mode adds h_st, target_st, pos_st, aux_st (and the ``*_mb`` views
+    become lazy slices).
     Returns the updated student/pruned params.
     """
     out_params = params_student if params_student is not None else params
     batch_all = _make_batches(model.cfg, calib, extra_batch, microbatch)
 
+    if dual_stream and _uniform_microbatches(batch_all):
+        return _walk_blocks_stacked(
+            model, params, out_params, batch_all, visit_fn, prefetch_depth
+        )
+    return _walk_blocks_lists(
+        model, params, out_params, batch_all, visit_fn, dual_stream
+    )
+
+
+def _walk_blocks_lists(model, params, out_params, batch_all, visit_fn,
+                       dual_stream: bool):
+    """Per-microbatch list walk (pruning drivers; ragged-shape fallback)."""
     adv = jax.jit(
         lambda bp, h, pos, aux, i: model.apply_block(None, i, bp, h, pos, **aux),
         static_argnames=("i",),
@@ -215,6 +335,73 @@ def walk_blocks(
                 hs_mb = ht_mb = [
                     adv(bp, h, p, a, i) for h, p, a in zip(hs_mb, pos_mb, aux_s)
                 ]
+    return out_params
+
+
+def _walk_blocks_stacked(model, params, out_params, batch_all, visit_fn,
+                         prefetch_depth: int):
+    """Stacked dual-stream walk: one scanned dispatch per stream advance,
+    teacher stream pipelined ``prefetch_depth`` blocks ahead."""
+    from repro.obs import metrics as OM
+    from repro.obs import trace as OT
+    from repro.obs.profile import DispatchLedger
+
+    ledger = DispatchLedger("ebft/walk")
+    n_mb = len(batch_all)
+
+    def adv_scan_fn(bp, h_st, pos_st, aux_st, i):
+        def one(args):
+            h, pos, aux = args
+            return model.apply_block(None, i, bp, h, pos, **aux)
+
+        return jax.lax.map(one, (h_st, pos_st, aux_st))
+
+    adv_scan = jax.jit(adv_scan_fn, static_argnames=("i",))
+    batch_st = jax.tree.map(lambda *xs: jnp.stack(xs), *batch_all)
+
+    for seg in R.execution_plan(model):
+        # stream setup: one scanned dispatch per (stream, segment)
+        h0_jit = jax.jit(lambda p, bst, h0=seg.h0: jax.lax.map(
+            lambda b: h0(p, b), bst))
+        aux_jit = jax.jit(lambda p, bst, aux=seg.aux: jax.lax.map(
+            lambda b: aux(p, b), bst))
+        ht_st, pos_st = h0_jit(params, batch_st)
+        aux_t_st = aux_jit(params, batch_st)
+        hs_st, _ = h0_jit(out_params, batch_st)
+        aux_s_st = aux_jit(out_params, batch_st)
+        ledger.dispatch(4)
+
+        pf = TeacherPrefetcher(
+            model, params, seg.visits, adv_scan, ht_st, pos_st, aux_t_st,
+            prefetch_depth, ledger=ledger,
+        )
+
+        for k, (i, site) in enumerate(seg.visits):
+            with OT.span("walk/teacher", block=i) as sp_t:
+                target_st = pf.get(k)
+            bp = model.get_block(out_params, i)
+            ctx = dict(
+                h_st=hs_st, target_st=target_st, pos_st=pos_st,
+                aux_st=aux_s_st, site=site,
+                h_mb=Unstacked(hs_st, n_mb),
+                target_mb=Unstacked(target_st, n_mb),
+                pos_mb=Unstacked(pos_st, n_mb),
+                aux_mb=Unstacked(aux_s_st, n_mb),
+            )
+            with OT.span("walk/tune", block=i) as sp_v:
+                new_bp = visit_fn(i, bp, ctx)
+            if new_bp is not None:
+                out_params = model.set_block(out_params, i, new_bp)
+                bp = new_bp
+            with OT.span("walk/student", block=i) as sp_s:
+                hs_st = adv_scan(bp, hs_st, pos_st, aux_s_st, i)
+                ledger.dispatch()
+                sp_s.fence(hs_st)
+            if OT.enabled():
+                OM.histogram("ebft/walk/teacher_s").observe(sp_t.duration)
+                OM.histogram("ebft/walk/tune_s").observe(sp_v.duration)
+                OM.histogram("ebft/walk/student_s").observe(sp_s.duration)
+                OM.gauge("ebft/walk/prefetch_inflight").set(pf.in_flight())
     return out_params
 
 

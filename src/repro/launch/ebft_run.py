@@ -94,6 +94,12 @@ def main(argv=None) -> None:
     ap.add_argument("--calib-samples", type=int, default=64)
     ap.add_argument("--ebft-lr", type=float, default=1e-2)
     ap.add_argument("--ebft-epochs", type=int, default=10)
+    ap.add_argument("--no-fused-epochs", action="store_true",
+                    help="run the legacy per-microbatch tune loop instead "
+                         "of the fused scanned+donated dispatch")
+    ap.add_argument("--prefetch-depth", type=int, default=1,
+                    help="teacher stream dispatched this many blocks ahead "
+                         "of the tuner (0 = strictly serial)")
     ap.add_argument("--baselines", default="",
                     help="comma list of {dsnot,mask,lora} to also run")
     ap.add_argument("--seed", type=int, default=0)
@@ -115,6 +121,8 @@ def main(argv=None) -> None:
                 "ebft_lr": args.ebft_lr, "ebft_epochs": args.ebft_epochs,
                 "calib_samples": args.calib_samples, "seq": args.seq,
                 "seed": args.seed,
+                "fused_epochs": not args.no_fused_epochs,
+                "prefetch_depth": args.prefetch_depth,
             },
         )
     say = run.say if run is not None else print
@@ -152,7 +160,9 @@ def main(argv=None) -> None:
     say(f"{args.method} ppl {' ' * (10 - len(args.method))}"
         f"{ppl[args.method]:8.2f}   ({phases['prune']:.0f}s)")
 
-    ecfg = ebft.EBFTConfig(lr=args.ebft_lr, epochs=args.ebft_epochs)
+    ecfg = ebft.EBFTConfig(lr=args.ebft_lr, epochs=args.ebft_epochs,
+                           fused_epochs=not args.no_fused_epochs,
+                           prefetch_depth=args.prefetch_depth)
     with _phase("phase/ebft", lr=args.ebft_lr, epochs=args.ebft_epochs) as sp:
         tuned, reports = ebft.finetune(model, params, pruned, masks, calib, ecfg)
         sp.fence(tuned)
@@ -192,7 +202,11 @@ def main(argv=None) -> None:
         say(f"LoRA ppl           {ppl['LoRA']:8.2f}   ({sp.duration:.0f}s)")
 
     if run is not None:
-        peak = OM.summary().get("ebft/live_block_bytes", {}).get("max")
+        summ = OM.summary()
+        peak = summ.get("ebft/live_block_bytes", {}).get("max")
+        tune_max = max((r.dispatches for r in reports), default=0)
+        sync_max = max((r.host_syncs for r in reports), default=0)
+        fused_all = bool(reports) and all(r.path == "fused" for r in reports)
         path = args.bench_out
         run.finish(
             extra={
@@ -203,10 +217,28 @@ def main(argv=None) -> None:
                     "num_blocks": len(reports),
                     "mean_e_drop": mean_drop,
                     "peak_live_block_bytes": peak,
+                    "fused_epochs": not args.no_fused_epochs,
+                    "prefetch_depth": args.prefetch_depth,
                     "early_stops": {
                         reason: sum(1 for r in reports if r.early_stop == reason)
                         for reason in {r.early_stop for r in reports}
                     },
+                },
+                # dispatch/host-sync accounting (docs/PERF.md): per-block =
+                # tune-path dispatches + 2 stream advances (teacher+student)
+                # in the fused/stacked walk
+                "dispatch": {
+                    "tune_per_block_max": tune_max,
+                    "tune_host_syncs_per_block_max": sync_max,
+                    "per_block_max": tune_max + (2 if fused_all else 0),
+                    "fused_all_blocks": fused_all,
+                    "walk_total": summ.get("ebft/walk/dispatches", {}).get("value"),
+                    "walk_host_syncs": summ.get(
+                        "ebft/walk/host_syncs", {}).get("value"),
+                },
+                "walk_phases": {
+                    phase: summ.get(f"ebft/walk/{phase}_s", {}).get("sum")
+                    for phase in ("teacher", "tune", "student")
                 },
             },
             summary_path=path,

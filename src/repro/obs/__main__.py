@@ -37,6 +37,10 @@ def main(argv=None) -> int:
     vp.add_argument("--require", nargs="*", default=[], metavar="KEY",
                     help="top-level keys the artifact must carry "
                          "(e.g. blocks phases)")
+    vp.add_argument("--max-dispatches-per-block", type=int, default=None,
+                    metavar="N",
+                    help="fail if dispatch.per_block_max exceeds N "
+                         "(the fused-walk dispatch budget, docs/PERF.md)")
 
     args = ap.parse_args(argv)
     try:
@@ -55,7 +59,10 @@ def main(argv=None) -> int:
             sys.stderr.close()
         return 0
 
-    problems = validate_payload(payload, require=args.require)
+    problems = validate_payload(
+        payload, require=args.require,
+        max_dispatches_per_block=args.max_dispatches_per_block,
+    )
     if problems:
         for p in problems:
             print(f"INVALID {args.artifact}: {p}")

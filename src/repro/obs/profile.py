@@ -67,6 +67,36 @@ def is_abstract(*values: Any) -> bool:
 
 
 # ---------------------------------------------------------------------------
+class DispatchLedger:
+    """Counts device dispatches and host-sync events for one region.
+
+    The fused-EBFT acceptance budget (docs/PERF.md) is expressed in these
+    two numbers: a *dispatch* is one jitted-executable launch enqueued on
+    the device stream; a *host sync* is one device→host transfer the host
+    blocks on (``float(x)``, ``np.asarray(x)``, ``device_get``,
+    ``block_until_ready``). The ledger is a plain counter pair — always
+    live, so :class:`~repro.core.ebft.BlockReport` carries real numbers
+    even with observability off — and mirrors into the metrics registry
+    when one is installed.
+    """
+
+    __slots__ = ("name", "dispatches", "host_syncs")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.dispatches = 0
+        self.host_syncs = 0
+
+    def dispatch(self, n: int = 1) -> None:
+        self.dispatches += n
+        M.counter(f"{self.name}/dispatches").inc(n)
+
+    def host_sync(self, n: int = 1) -> None:
+        self.host_syncs += n
+        M.counter(f"{self.name}/host_syncs").inc(n)
+
+
+# ---------------------------------------------------------------------------
 def record_kernel(name: str, flops: float, bytes_moved: float,
                   fn: Callable, *args, **kw):
     """Run ``fn(*args, **kw)`` fenced and book it against the roofline.

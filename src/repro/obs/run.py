@@ -180,12 +180,19 @@ _MANIFEST_FIELDS = {
 
 
 def validate_payload(
-    payload: Any, require: Optional[List[str]] = None
+    payload: Any,
+    require: Optional[List[str]] = None,
+    max_dispatches_per_block: Optional[int] = None,
 ) -> List[str]:
     """Returns a list of problems ([] = valid summary artifact).
 
     ``require`` names additional top-level keys the artifact must carry
     (e.g. ``["blocks", "phases"]`` for ``BENCH_ebft.json``).
+
+    ``max_dispatches_per_block`` gates the fused-walk dispatch budget
+    (docs/PERF.md): the artifact's ``dispatch.per_block_max`` — tune-path
+    dispatches plus the two stream advances — must not exceed it. CI runs
+    the tiny config with ``epochs + 2`` here.
     """
     problems: List[str] = []
     if not isinstance(payload, dict):
@@ -217,4 +224,23 @@ def validate_payload(
     for key in require or []:
         if key not in payload:
             problems.append(f"missing required key {key!r}")
+
+    if max_dispatches_per_block is not None:
+        dispatch = payload.get("dispatch")
+        if not isinstance(dispatch, dict):
+            problems.append(
+                "missing 'dispatch' object (needed for "
+                "--max-dispatches-per-block)"
+            )
+        else:
+            per_block = dispatch.get("per_block_max")
+            if not isinstance(per_block, int):
+                problems.append(
+                    "dispatch.per_block_max missing or non-integer"
+                )
+            elif per_block > max_dispatches_per_block:
+                problems.append(
+                    f"dispatch.per_block_max = {per_block} exceeds "
+                    f"budget {max_dispatches_per_block}"
+                )
     return problems

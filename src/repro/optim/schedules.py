@@ -38,9 +38,34 @@ def plateau_early_stop(history, patience: int = 3, rel_tol: float = 1e-3) -> boo
 
     ``history`` is a list of float losses; returns True when the best loss
     has not improved by ``rel_tol`` (relative) for ``patience`` epochs.
+    Degenerate inputs (empty history, ``patience`` longer than the history,
+    non-positive ``patience``) never stop.
     """
-    if len(history) < patience + 1:
+    if patience <= 0 or len(history) < patience + 1:
         return False
     best_before = min(history[:-patience])
     recent_best = min(history[-patience:])
     return recent_best > best_before * (1.0 - rel_tol)
+
+
+def plateau_early_stop_device(
+    hist: jnp.ndarray, n, patience: int, rel_tol: float
+) -> jnp.ndarray:
+    """The same predicate as a jittable device-side expression.
+
+    ``hist`` is a fixed-size f32 buffer whose first ``n`` entries are
+    valid (the rest may hold anything); ``n`` may be a traced scalar.
+    Used by the fused EBFT epoch scan (core/ebft.py) so early stopping
+    needs no host round-trip. Semantics match :func:`plateau_early_stop`
+    on ``hist[:n]`` exactly, including the degenerate cases.
+    """
+    if patience <= 0:
+        return jnp.asarray(False)
+    n = jnp.asarray(n, jnp.int32)
+    idx = jnp.arange(hist.shape[0], dtype=jnp.int32)
+    inf = jnp.asarray(jnp.inf, hist.dtype)
+    best_before = jnp.min(jnp.where(idx < n - patience, hist, inf))
+    recent = (idx >= n - patience) & (idx < n)
+    recent_best = jnp.min(jnp.where(recent, hist, inf))
+    fire = recent_best > best_before * (1.0 - rel_tol)
+    return jnp.where(n >= patience + 1, fire, False)

@@ -110,12 +110,13 @@ class Trainer:
                 )
                 OM.counter("train/steps").inc()
                 if step % self.log_every == 0:
+                    # obs: sync-ok (log_every is the user's sync-cadence knob)
                     loss = float(metrics["loss"])
                     history.append((step, loss))
                     OM.series("train/loss").append(loss, step=step)
                     if "grad_norm" in metrics:
                         OM.series("train/grad_norm").append(
-                            float(metrics["grad_norm"]), step=step
+                            float(metrics["grad_norm"]), step=step  # obs: sync-ok
                         )
                 if self.ckpt_dir and (step + 1) % self.ckpt_every == 0:
                     with OT.span("train/checkpoint", step=step + 1):

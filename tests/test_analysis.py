@@ -357,6 +357,53 @@ def test_source_lint_flags_seeded_violations(tmp_path):
     assert not errors(findings)  # hygiene findings are warn-severity
 
 
+def test_source_lint_obs003_in_loop_host_syncs(tmp_path):
+    core = tmp_path / "core"
+    core.mkdir()
+    (core / "hot.py").write_text(
+        "import numpy as np\n"
+        "x = float(y)\n"                          # out of loop: fine
+        "for i in range(3):\n"
+        "    a = float(z[i])\n"                   # OBS003 (line 4)
+        "    b = np.asarray(z[i])\n"              # OBS003 (line 5)
+        "    c = jnp.asarray(z[i])\n"             # jnp staging: fine
+        "    d = float(w)  # obs: sync-ok why\n"  # suppressed inline
+        "    # obs: sync-ok (epoch mean)\n"
+        "    e = float(v)\n"                      # suppressed by prev line
+        "while cond:\n"
+        "    f = float(q)\n"                      # OBS003 (line 11)
+        "g = float(done)\n"                       # loop exited: fine
+    )
+    launch = tmp_path / "launch"
+    launch.mkdir()
+    (launch / "cli.py").write_text(
+        "for i in range(3):\n"
+        "    x = float(y[i])\n"  # not a hot-path package
+    )
+    findings = check_sources(src_root=str(tmp_path))
+    obs3 = [f for f in findings if f.code == "OBS003"]
+    assert sorted(f.location for f in obs3) == [
+        "repro/core/hot.py:11", "repro/core/hot.py:4", "repro/core/hot.py:5",
+    ]
+    assert not errors(findings)
+
+
+def test_source_lint_obs003_nested_loop_scope(tmp_path):
+    core = tmp_path / "core"
+    core.mkdir()
+    (core / "nest.py").write_text(
+        "for i in range(3):\n"
+        "    for j in range(3):\n"
+        "        a = float(x[i][j])\n"  # OBS003 (inner)
+        "    b = float(y[i])\n"  # OBS003 (outer loop still open)
+        "c = float(z)\n"         # all loops closed: fine
+    )
+    findings = check_sources(src_root=str(tmp_path))
+    assert sorted(f.location for f in findings if f.code == "OBS003") == [
+        "repro/core/nest.py:3", "repro/core/nest.py:4",
+    ]
+
+
 def test_source_lint_clean_tree_and_real_repo(tmp_path):
     obs = tmp_path / "obs"
     obs.mkdir()

@@ -181,6 +181,25 @@ def test_validate_payload_rejects_malformed():
         == ["artifact is list, expected object"]
 
 
+def test_validate_payload_dispatch_budget():
+    run = start_run("ok", console=False)
+    payload = run.finish()
+    # no dispatch object at all
+    assert any("dispatch" in p for p in
+               validate_payload(payload, max_dispatches_per_block=4))
+    within = dict(payload, dispatch={"per_block_max": 3})
+    assert validate_payload(within, max_dispatches_per_block=4) == []
+    over = dict(payload, dispatch={"per_block_max": 9})
+    probs = validate_payload(over, max_dispatches_per_block=4)
+    assert probs and "exceeds budget 4" in probs[0]
+    # malformed field type
+    bad = dict(payload, dispatch={"per_block_max": "lots"})
+    assert any("non-integer" in p for p in
+               validate_payload(bad, max_dispatches_per_block=4))
+    # no budget requested -> no dispatch requirements
+    assert validate_payload(payload) == []
+
+
 # ---------------------------------------------------------------------------
 # profiling
 # ---------------------------------------------------------------------------
@@ -241,7 +260,10 @@ def test_ebft_run_emits_valid_bench_artifact(tmp_path, capsys):
 
     payload = load_artifact(str(bench))
     assert validate_payload(
-        payload, require=["blocks", "phases", "perplexity", "ebft"]
+        payload,
+        require=["blocks", "phases", "perplexity", "ebft", "dispatch",
+                 "walk_phases"],
+        max_dispatches_per_block=4,  # epochs (2) + 2, the CI budget
     ) == []
     assert payload["manifest"]["config"] == "tiny_dense"
     assert payload["manifest"]["method"] == "wanda"
@@ -257,6 +279,16 @@ def test_ebft_run_emits_valid_bench_artifact(tmp_path, capsys):
         # history = [E_before] + one entry per epoch run
         assert len(b["history"]) == b["epochs_run"] + 1
         assert b["live_bytes"] > 0
+        assert b["path"] == "fused"
+        assert b["dispatches"] == 1 and b["host_syncs"] == 1
+
+    # the fused-walk accounting: per-block = 1 tune + 2 stream advances
+    assert payload["ebft"]["fused_epochs"] is True
+    assert payload["dispatch"]["per_block_max"] == 3
+    assert payload["dispatch"]["fused_all_blocks"] is True
+    # per-phase walk wall-clock was recorded
+    for phase in ("teacher", "tune", "student"):
+        assert payload["walk_phases"][phase] > 0
 
     # phases + the paper's streaming-memory measurement
     assert {"pretrain", "prune", "ebft", "eval_dense"} <= set(payload["phases"])
@@ -272,8 +304,13 @@ def test_ebft_run_emits_valid_bench_artifact(tmp_path, capsys):
     ebft_phase = next(s for s in payload["trace"] if s["name"] == "phase/ebft")
     walk = ebft_phase["children"][0]
     assert walk["name"] == "ebft/walk"
-    assert len([c for c in walk["children"] if c["name"] == "ebft/block"]) \
-        == len(blocks)
+    # the stacked walk wraps each visit in teacher/tune/student phase
+    # spans; ebft/block nests inside walk/tune
+    walk_names = [c["name"] for c in walk["children"]]
+    assert {"walk/teacher", "walk/tune", "walk/student"} <= set(walk_names)
+    tune_spans = [c for c in walk["children"] if c["name"] == "walk/tune"]
+    assert len([g for t in tune_spans for g in t.get("children", [])
+                if g["name"] == "ebft/block"]) == len(blocks)
 
     # event stream is crash-safe JSONL with the same manifest
     events = read_jsonl(str(jsonl))
