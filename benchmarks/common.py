@@ -39,6 +39,21 @@ EBFT_LR = 1e-2
 PRETRAIN_STEPS = 300
 
 
+def bench_spec(**overrides):
+    """The benchmark harness's settings as a :class:`RunSpec`.
+
+    Tables write their BENCH_*.json manifest header through this, so the
+    artifacts carry the same round-trippable ``run_spec`` section the
+    launchers do (repro.launch.api) instead of ad-hoc keys.
+    """
+    from repro.launch.api import RunSpec
+
+    base = dict(kind="ebft", arch="tiny_dense", lr=EBFT_LR,
+                pretrain_steps=PRETRAIN_STEPS, mesh_data=1)
+    base.update(overrides)
+    return RunSpec(**base)
+
+
 def dense_teacher(arch: str = "tiny_dense", steps: int = PRETRAIN_STEPS):
     """Pretrained tiny model (cached on disk across benchmark runs)."""
     cfg = get_config(arch)

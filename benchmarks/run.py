@@ -22,6 +22,7 @@ from benchmarks import (
     fig2_calibration, roofline_report, table1_unstructured, table2_nm,
     table3_zeroshot, table4_lora, table6_masktuning,
 )
+from benchmarks.common import bench_spec
 from repro.obs.run import start_run
 
 ALL = {
@@ -40,8 +41,11 @@ def run_one(name: str, quick: bool, obs: bool) -> float:
     """Run one table under its own obs run; returns elapsed seconds."""
     run = None
     if obs:
+        # the RunSpec section makes bench manifests round-trippable the
+        # same way the launcher artifacts are (repro.launch.api)
         run = start_run(f"bench_{name}",
-                        extra_manifest={"quick": quick, "table": name})
+                        extra_manifest={**bench_spec().to_manifest(),
+                                        "quick": quick, "table": name})
     t0 = time.perf_counter()
     table = ALL[name](quick=quick)
     dt = time.perf_counter() - t0

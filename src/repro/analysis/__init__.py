@@ -15,7 +15,9 @@ Five passes, one report (``python -m repro.analysis``; docs/ANALYSIS.md):
     (CFG0xx / SHD0xx / HLO0xx);
   * ``source_lint`` — config-independent source hygiene: ``print()`` in
     hot-path packages and non-monotonic ``time.time()`` anywhere in
-    ``src/repro`` must go through repro.obs instead (OBS0xx).
+    ``src/repro`` must go through repro.obs instead (OBS0xx); deprecated
+    launcher flags in in-repo callers fail the build (API001 — the
+    RunSpec shim exists for users, not for us).
 
 Findings carry stable codes and severities (error/warn/info); the CLI
 exit code is governed by ``--fail-on`` and individual codes can be
@@ -98,12 +100,15 @@ def run(
                 )])
 
     if "source_lint" in selected:
-        from repro.analysis.source_lint import check_sources
+        from repro.analysis.source_lint import (
+            check_deprecated_flags, check_sources,
+        )
 
         if progress:
             progress("source_lint src/repro")
         try:
             report.add(check_sources())
+            report.add(check_deprecated_flags())
         except Exception as e:  # a crashed pass is itself a finding
             report.add([Finding(
                 code="ANA000", severity="error", pass_name="source_lint",

@@ -13,7 +13,9 @@ from typing import Dict, List, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.analysis.config_check import check_model_config, check_sharding
+from repro.analysis.config_check import (
+    check_ebft_mesh_plan, check_model_config, check_sharding,
+)
 from repro.analysis.findings import Finding
 from repro.analysis.jaxpr_lint import lint_jaxpr
 from repro.analysis.kernel_check import check_config_kernels
@@ -72,6 +74,8 @@ def run_sharding_pass(name: str, cfg: ModelConfig, smoke: ModelConfig) -> List[F
     findings = check_model_config(name, cfg)
     if not any(f.severity == "error" for f in findings):
         findings += check_sharding(name, cfg, multi_pod=False)
+        # the mesh-aware EBFT walk's layouts (production mesh + microbatch)
+        findings += check_ebft_mesh_plan(name, cfg)
     return findings
 
 

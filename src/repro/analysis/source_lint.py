@@ -21,10 +21,18 @@ round-trips:
     after the loop (docs/PERF.md) — or, where the sync is the point
     (host-side convergence checks, user-requested logging), annotate the
     line or the line above it with ``obs: sync-ok`` and a reason.
+  * deprecated launcher flags (API001, **error**): the RunSpec facade
+    (``repro.launch.api``) keeps the old CLI spellings alive for users,
+    but in-repo callers — tests, CI, benchmarks, docs' runnable examples
+    — must use the canonical flags, or the shim's warn-once guarantee
+    rots. Lines exercising the shim on purpose annotate
+    ``api: deprecated-ok``.
 
 The pass is config-independent: it scans the source tree once per
 analysis run, skipping ``repro.obs`` (it *implements* the clocks/sinks)
-and ``repro.analysis`` (self-scan).
+and ``repro.analysis`` (self-scan). The deprecated-flag scan covers the
+whole repo (src/tests/benchmarks/examples/.github) except the shim
+itself.
 """
 from __future__ import annotations
 
@@ -130,4 +138,73 @@ def check_sources(src_root: Optional[str] = None) -> List[Finding]:
             findings.extend(
                 _scan_file(os.path.join(dirpath, fname), rel, in_hot_path)
             )
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# API001 — deprecated launcher flags in in-repo callers
+# ---------------------------------------------------------------------------
+_DEPRECATED_OK = "api: deprecated-ok"
+_FLAG_SCAN_DIRS = ("src", "tests", "benchmarks", "examples", ".github")
+_FLAG_EXTS = (".py", ".yml", ".yaml", ".sh")
+# the shim itself is where the old spellings are defined
+_FLAG_EXEMPT = (os.path.join("src", "repro", "launch", "api.py"),)
+
+
+def check_deprecated_flags(repo_root: Optional[str] = None) -> List[Finding]:
+    """Fail (severity error) on deprecated launcher flags in repo files.
+
+    Scans the unambiguous spellings in ``repro.launch.api.LINT_DEPRECATED``
+    across src/tests/benchmarks/examples/.github; a line that exercises the
+    deprecation shim on purpose carries ``api: deprecated-ok``.
+    """
+    from repro.launch.api import _DEPRECATED, LINT_DEPRECATED
+
+    if repo_root is None:
+        # .../src/repro/analysis -> repo root is three levels up
+        repo_root = os.path.abspath(
+            os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         "..", "..", ".."))
+    canonical = {
+        old: can
+        for table in _DEPRECATED.values()
+        for can, old in table.items()
+        if old in LINT_DEPRECATED
+    }
+    pattern = re.compile(
+        "(" + "|".join(re.escape(f) for f in LINT_DEPRECATED) + r")(?![\w-])"
+    )
+    findings: List[Finding] = []
+    for top in _FLAG_SCAN_DIRS:
+        base = os.path.join(repo_root, top)
+        if not os.path.isdir(base):
+            continue
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+            for fname in sorted(filenames):
+                if not fname.endswith(_FLAG_EXTS):
+                    continue
+                path = os.path.join(dirpath, fname)
+                rel = os.path.relpath(path, repo_root)
+                if rel in _FLAG_EXEMPT:
+                    continue
+                try:
+                    with open(path, encoding="utf-8") as f:
+                        lines = f.readlines()
+                except OSError:
+                    continue
+                for lineno, raw in enumerate(lines, start=1):
+                    m = pattern.search(raw)
+                    if not m or _DEPRECATED_OK in raw:
+                        continue
+                    old = m.group(1)
+                    findings.append(Finding(
+                        code="API001", severity="error",
+                        pass_name="source_lint",
+                        location=f"{rel}:{lineno}",
+                        message=f"deprecated launcher flag {old}; use "
+                                f"{canonical.get(old, 'the canonical flag')} "
+                                "(or annotate 'api: deprecated-ok' when "
+                                "testing the shim)",
+                    ))
     return findings

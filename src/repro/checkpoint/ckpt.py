@@ -14,11 +14,17 @@ Design decisions for 1000+ node operation:
 * **Async** — ``save(async_write=True)`` snapshots to host memory
   (device_get) synchronously (cheap vs a training step) and writes in a
   background thread so the train loop never blocks on the filesystem.
-* **Elastic restore** — arrays are stored unsharded; ``restore`` places
-  them with *whatever sharding the caller passes*, so a job restarted on a
-  different mesh (pod lost, data-axis shrunk) reshard-on-loads. (A real
-  deployment would write per-host shards + reshard in a restore service;
-  the manifest already records the source mesh to support that.)
+* **Elastic restore** — arrays are HOST-GATHERED on save (a sharded
+  jax.Array is assembled to one full ndarray per leaf, and the manifest
+  records each leaf's source PartitionSpec) and placed on restore with
+  the target sharding: an explicit ``shardings`` pytree if the caller
+  passes one, else the ``NamedSharding`` carried by the corresponding
+  template leaf — so ``restore(dir, {"params": params})`` on a mesh
+  round-trips sharded trees without extra plumbing, and a job restarted
+  on a different mesh (pod lost, data-axis shrunk) reshard-on-loads.
+  (A real deployment would write per-host shards + reshard in a restore
+  service; the manifest already records the source layout to support
+  that.)
 * **Self-describing** — restore rebuilds the pytree purely from the
   manifest, so the reader needs no template (it can also *check* against
   one, catching config drift between writer and reader).
@@ -66,6 +72,24 @@ def _flatten_with_names(tree):
     return names, leaves, treedef
 
 
+def _host_gather(x) -> np.ndarray:
+    """Assemble one leaf to a FULL host ndarray, whatever its sharding.
+
+    ``device_get`` on a (single-process) sharded jax.Array gathers every
+    shard; the npz writer below then stores the unsharded value, which is
+    what makes restore-onto-a-different-mesh possible at all.
+    """
+    return np.asarray(jax.device_get(x))
+
+
+def _source_spec(x) -> Optional[str]:
+    """The leaf's PartitionSpec as a string, for the manifest (None for
+    host arrays / single-device placements)."""
+    sharding = getattr(x, "sharding", None)
+    spec = getattr(sharding, "spec", None)
+    return str(spec) if spec is not None else None
+
+
 def save(
     directory: str,
     tree: Any,
@@ -74,7 +98,8 @@ def save(
     async_write: bool = False,
 ) -> str:
     names, leaves, treedef = _flatten_with_names(tree)
-    host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]
+    source_specs = [_source_spec(x) for x in leaves]
+    host_leaves = [_host_gather(x) for x in leaves]
 
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = final + ".tmp"
@@ -91,6 +116,7 @@ def save(
             "names": names,
             "shapes": [list(a.shape) for a in host_leaves],
             "dtypes": [str(a.dtype) for a in host_leaves],
+            "source_specs": source_specs,
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
@@ -135,7 +161,10 @@ def restore(
 ) -> Any:
     """Restore into ``template``'s structure. ``shardings`` (optional pytree
     of NamedSharding matching template) enables elastic resharding: each
-    full array is device_put with the *current* mesh's sharding."""
+    full array is device_put with the *current* mesh's sharding. When no
+    ``shardings`` is passed, any template leaf that is itself a mesh-placed
+    jax.Array (carries a NamedSharding) is restored with that placement —
+    sharded trees round-trip with no extra arguments."""
     if step is None:
         step = latest_step(directory)
         if step is None:
@@ -155,12 +184,21 @@ def restore(
         "config drift between writer and reader"
     )
     out = []
-    s_leaves = (
-        jax.tree_util.tree_flatten(shardings)[0] if shardings is not None else None
-    )
+    if shardings is not None:
+        s_leaves = jax.tree_util.tree_flatten(shardings)[0]
+    else:
+        # derive the target placement from the template itself: only
+        # NamedSharding counts (a plain single-device array must stay
+        # uncommitted, exactly as before)
+        from jax.sharding import NamedSharding
+
+        s_leaves = [
+            s if isinstance(s, NamedSharding) else None
+            for s in (getattr(t, "sharding", None) for t in t_leaves)
+        ]
     for i, (a, t) in enumerate(zip(leaves, t_leaves)):
         arr = jnp.asarray(a, dtype=t.dtype)
-        if s_leaves is not None:
+        if s_leaves[i] is not None:
             arr = jax.device_put(arr, s_leaves[i])
         out.append(arr)
     return jax.tree_util.tree_unflatten(treedef, out)

@@ -37,6 +37,17 @@ Zamba2's shared attention block (one weight set, G invocation sites) is
 fine-tuned once on the *sum* of its per-site reconstruction errors
 (DESIGN.md §5): site data is collected during the walk and the shared
 block is tuned on the union afterwards.
+
+Mesh-aware mode (docs/DISTRIBUTED.md): when ``EBFTConfig.mesh_plan`` is
+an active :class:`~repro.distributed.meshplan.MeshPlan`, the stacked
+calibration microbatches are sharded over the mesh's batch axes and the
+live block's weights/masks (and, by inheritance inside the donated
+dispatch, its Adam moments) over ``"model"``; the fused scan then runs
+SPMD — GSPMD inserts the psum gradient all-reduce across the data axes —
+while the one-live-block-per-device memory property *improves* to
+one-live-block-SHARD per device. Single-device behavior (``mesh_plan``
+None/inactive) is bit-for-bit unchanged, and ragged shapes still fall
+back to the unsharded legacy loop.
 """
 from __future__ import annotations
 
@@ -51,7 +62,7 @@ from repro.core import reconstruction as R
 from repro.core.pruning import common as C
 from repro.obs import metrics as OM
 from repro.obs import trace as OT
-from repro.obs.profile import DispatchLedger, ebft_live_block_bytes
+from repro.obs.profile import DispatchLedger, ebft_live_block_bytes, live_bytes
 from repro.optim.optimizers import adam, apply_updates
 from repro.optim.schedules import plateau_early_stop, plateau_early_stop_device
 from repro.sparsity.sparse_params import apply_masks
@@ -69,6 +80,7 @@ class EBFTConfig:
     seed: int = 0
     fused_epochs: bool = True  # one scanned+donated dispatch per block
     prefetch_depth: int = 1    # teacher stream dispatched this many blocks ahead
+    mesh_plan: Optional[Any] = None  # MeshPlan; None/inactive = single device
 
 
 @dataclasses.dataclass
@@ -84,6 +96,9 @@ class BlockReport:
     path: str = "fused"              # "fused" | "legacy"
     dispatches: int = 0              # tune-path device dispatches for this block
     host_syncs: int = 0              # tune-path device→host syncs for this block
+    device_dispatches: int = 0       # dispatches x participating devices
+    live_bytes_per_shard: int = 0    # live_bytes per device under the MeshPlan
+    collective_bytes: int = 0        # analytic grad all-reduce wire bytes
 
     def asdict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -207,26 +222,62 @@ def tune_block(
     if kind not in step_cache:
         step_cache[kind] = _make_tune_step(model, i, ecfg)
     opt, step, eval_loss, fused = step_cache[kind]
-    ledger = DispatchLedger("ebft/tune")
+    plan = ecfg.mesh_plan
+    sharded = plan is not None and plan.active and ecfg.fused_epochs
+    ledger = DispatchLedger(
+        "ebft/tune", devices=plan.device_count if sharded else 1
+    )
 
     with OT.span("ebft/block", index=i, kind=kind) as sp:
         if ecfg.fused_epochs and stacked is None:
             stacked = _stack_microbatches(data)
         if ecfg.fused_epochs and stacked is not None:
+            if sharded:
+                # block weights/masks over "model" (moments inherit inside
+                # the donated dispatch), calibration batch over the data
+                # axes; re-putting already-sharded walk streams is a no-op
+                bp = plan.put_block(bp)
+                mask_bp = plan.put_block(mask_bp)
+                stacked = plan.put_stacked(stacked)
             bp, report = _tune_block_fused(
                 i, kind, bp, mask_bp, stacked, fused, ledger
             )
+            if sharded:
+                # analytic wire accounting: one psum of the block's grads
+                # per optimizer step (epochs x microbatches), ring cost
+                n_mb = int(jax.tree.leaves(stacked)[0].shape[0])
+                steps = report.epochs_run * n_mb
+                report.collective_bytes = steps * plan.allreduce_bytes(
+                    live_bytes(bp)
+                )
         else:
             bp, report = _tune_block_legacy(
                 i, kind, bp, mask_bp, data, ecfg, opt, step, eval_loss, ledger
             )
+        report.device_dispatches = ledger.device_dispatches
 
         live = 0
         if OT.enabled():
             # the streaming claim, measured: only this block's weights,
             # masks, and Adam moments are optimizer-live right now
             live = ebft_live_block_bytes(bp, mask_bp)
+            live_shard = live
+            if sharded:
+                moments = jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct(np.shape(x), np.float32),
+                    bp,
+                )
+                live_shard = (plan.sharded_bytes(bp)
+                              + plan.sharded_bytes(mask_bp)
+                              + 2 * plan.sharded_bytes(moments))
+            report.live_bytes_per_shard = live_shard
             OM.gauge("ebft/live_block_bytes").set(live)  # summary max = peak
+            OM.gauge("ebft/live_block_bytes_per_shard").set(live_shard)
+            if report.collective_bytes:
+                OM.counter("ebft/collective_bytes").inc(report.collective_bytes)
+                OM.gauge("ebft/collective_bytes_per_block").set(
+                    report.collective_bytes
+                )
             OM.series("ebft/loss_before").append(report.loss_before, step=i)
             OM.series("ebft/loss_after").append(report.loss_after, step=i)
             OM.series("ebft/epochs_run").append(report.epochs_run, step=i)
@@ -240,7 +291,8 @@ def tune_block(
             sp.set(epochs=report.epochs_run, loss_before=report.loss_before,
                    loss_after=report.loss_after, early_stop=report.early_stop,
                    live_bytes=live, path=report.path,
-                   dispatches=report.dispatches, host_syncs=report.host_syncs)
+                   dispatches=report.dispatches, host_syncs=report.host_syncs,
+                   devices=ledger.devices)
         report.live_bytes = live
     return bp, report
 
@@ -325,9 +377,12 @@ def finetune(
 ) -> Tuple[Params, List[BlockReport]]:
     """The EBFT driver. Returns (fine-tuned sparse params, per-block reports)."""
     ecfg = ecfg or EBFTConfig()
+    plan = ecfg.mesh_plan
+    mesh_devices = plan.device_count if plan is not None and plan.active else 1
     with OT.span("ebft/walk", epochs=ecfg.epochs, lr=ecfg.lr,
                  microbatch=ecfg.microbatch, fused=ecfg.fused_epochs,
-                 prefetch_depth=ecfg.prefetch_depth):
+                 prefetch_depth=ecfg.prefetch_depth,
+                 mesh_devices=mesh_devices):
         student = apply_masks(pruned_params, masks)
         reports: List[BlockReport] = []
         step_cache: Dict = {}
@@ -370,6 +425,7 @@ def finetune(
             params_student=student,
             dual_stream=True,
             prefetch_depth=ecfg.prefetch_depth,
+            mesh_plan=ecfg.mesh_plan,
         )
 
         if shared_idx is not None and shared_sites:

@@ -245,6 +245,7 @@ def walk_blocks(
     params_student: Optional[Params] = None,
     dual_stream: bool = False,
     prefetch_depth: int = 0,
+    mesh_plan: Optional[Any] = None,
 ):
     """Block-by-block calibration walk.
 
@@ -268,6 +269,12 @@ def walk_blocks(
     stream_ctx fields: h_mb, pos_mb, aux_mb, target_mb, site; stacked
     mode adds h_st, target_st, pos_st, aux_st (and the ``*_mb`` views
     become lazy slices).
+
+    ``mesh_plan`` (:class:`repro.distributed.meshplan.MeshPlan`) shards the
+    stacked streams over the mesh's batch axes — teacher and student
+    activations come out data-sharded, not replicated, so a fused visitor
+    runs SPMD over the calibration microbatches. Inactive/None plans and
+    the ragged list walk are byte-identical to the unsharded behavior.
     Returns the updated student/pruned params.
     """
     out_params = params_student if params_student is not None else params
@@ -275,7 +282,8 @@ def walk_blocks(
 
     if dual_stream and _uniform_microbatches(batch_all):
         return _walk_blocks_stacked(
-            model, params, out_params, batch_all, visit_fn, prefetch_depth
+            model, params, out_params, batch_all, visit_fn, prefetch_depth,
+            mesh_plan=mesh_plan,
         )
     return _walk_blocks_lists(
         model, params, out_params, batch_all, visit_fn, dual_stream
@@ -339,14 +347,21 @@ def _walk_blocks_lists(model, params, out_params, batch_all, visit_fn,
 
 
 def _walk_blocks_stacked(model, params, out_params, batch_all, visit_fn,
-                         prefetch_depth: int):
+                         prefetch_depth: int, mesh_plan=None):
     """Stacked dual-stream walk: one scanned dispatch per stream advance,
-    teacher stream pipelined ``prefetch_depth`` blocks ahead."""
+    teacher stream pipelined ``prefetch_depth`` blocks ahead. With an
+    active ``mesh_plan`` the stacked streams are data-sharded at segment
+    setup, so every teacher/student advance (and the prefetcher's
+    in-flight targets) stays sharded — one SPMD dispatch, never a
+    replicated copy per device."""
     from repro.obs import metrics as OM
     from repro.obs import trace as OT
     from repro.obs.profile import DispatchLedger
 
-    ledger = DispatchLedger("ebft/walk")
+    sharded = mesh_plan is not None and mesh_plan.active
+    ledger = DispatchLedger(
+        "ebft/walk", devices=mesh_plan.device_count if sharded else 1
+    )
     n_mb = len(batch_all)
 
     def adv_scan_fn(bp, h_st, pos_st, aux_st, i):
@@ -358,6 +373,8 @@ def _walk_blocks_stacked(model, params, out_params, batch_all, visit_fn,
 
     adv_scan = jax.jit(adv_scan_fn, static_argnames=("i",))
     batch_st = jax.tree.map(lambda *xs: jnp.stack(xs), *batch_all)
+    if sharded:
+        batch_st = mesh_plan.put_stacked(batch_st)
 
     for seg in R.execution_plan(model):
         # stream setup: one scanned dispatch per (stream, segment)
@@ -369,6 +386,13 @@ def _walk_blocks_stacked(model, params, out_params, batch_all, visit_fn,
         aux_t_st = aux_jit(params, batch_st)
         hs_st, _ = h0_jit(out_params, batch_st)
         aux_s_st = aux_jit(out_params, batch_st)
+        if sharded:
+            # pin the stream layout: activations batch-sharded over the
+            # data axes (GSPMD usually propagates this from batch_st, but
+            # the walk's memory property depends on it, so make it law)
+            ht_st, pos_st, aux_t_st, hs_st, aux_s_st = mesh_plan.put_stacked(
+                (ht_st, pos_st, aux_t_st, hs_st, aux_s_st)
+            )
         ledger.dispatch(4)
 
         pf = TeacherPrefetcher(

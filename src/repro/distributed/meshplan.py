@@ -1,0 +1,187 @@
+"""MeshPlan — the device-layout contract for the EBFT calibration walk.
+
+The fused block-tuning loop (core/ebft.py) and the stacked dual-stream
+walk (core/pruning/common.py) are written against this one object instead
+of raw meshes: a plan says *which* mesh to run on and *how* each of the
+three tensor families is laid out on it:
+
+  * stacked calibration streams ``(n_mb, B, ...)`` — batch dim 1 sharded
+    over the batch axes (``("data",)``, or ``("pod", "data")`` on a
+    multi-pod mesh); the microbatch scan axis is never sharded.
+  * block weights / masks / Adam moments — sharded over ``"model"`` by
+    the logical-axis rules in :mod:`repro.distributed.sharding`
+    (``param_pspecs``), the same layout the training cells use.
+  * everything that does not divide its mesh axis falls back to
+    replication *per leaf* — a plan never fails, it degrades, and
+    :meth:`explain` reports exactly which leaves degraded (the
+    ``repro.analysis`` sharding pass turns those into findings).
+
+``MeshPlan.single()`` (or ``mesh_plan=None`` anywhere one is accepted)
+is the bit-for-bit single-device path: no ``device_put``, no sharding
+constraints, no collectives — the pre-mesh behavior exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as SH
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    """Device layout for a mesh-aware EBFT walk. ``mesh=None`` = single
+    device (the legacy, bit-for-bit-unchanged path)."""
+
+    mesh: Optional[Mesh] = None
+
+    # -- constructors -------------------------------------------------------
+    @staticmethod
+    def single() -> "MeshPlan":
+        return MeshPlan(None)
+
+    @staticmethod
+    def from_mesh(mesh: Mesh) -> "MeshPlan":
+        return MeshPlan(mesh)
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def active(self) -> bool:
+        """True when the plan actually shards (a mesh with >1 device).
+
+        ``mesh.size`` (not ``mesh.devices``) so plans over AbstractMesh
+        work too — the analysis sharding pass checks layouts device-free.
+        """
+        return self.mesh is not None and int(self.mesh.size) > 1
+
+    @property
+    def device_count(self) -> int:
+        return int(self.mesh.size) if self.mesh is not None else 1
+
+    @property
+    def data_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        size = 1
+        for a in SH.batch_axes(self.mesh):
+            size *= SH.mesh_axis_size(self.mesh, a)
+        return size
+
+    @property
+    def model_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        return SH.mesh_axis_size(self.mesh, SH.MODEL_AXIS)
+
+    def describe(self) -> Dict[str, Any]:
+        """Manifest-ready summary (goes into BENCH_*.json headers)."""
+        if self.mesh is None:
+            return {"devices": 1, "axes": {}, "active": False}
+        return {
+            "devices": self.device_count,
+            "axes": {name: int(size) for name, size in self.mesh.shape.items()},
+            "active": self.active,
+        }
+
+    # -- sharding rules -----------------------------------------------------
+    def stacked_spec(self, leaf) -> P:
+        """PartitionSpec for one stacked-stream leaf ``(n_mb, B, ...)``:
+        shard the per-microbatch batch dim (dim 1) over the batch axes;
+        replicate when it does not divide (the divisibility fallback the
+        analysis pass reports)."""
+        shape = tuple(leaf.shape)
+        if self.mesh is None or len(shape) < 2:
+            return P(*([None] * len(shape)))
+        baxes = SH.batch_axes(self.mesh)
+        bsize = self.data_size
+        if bsize > 1 and shape[1] % bsize == 0 and shape[1] >= bsize:
+            axis = baxes if len(baxes) > 1 else baxes[0]
+            return P(None, axis, *([None] * (len(shape) - 2)))
+        return P(*([None] * len(shape)))
+
+    def stacked_shardings(self, tree: Any) -> Any:
+        return jax.tree.map(
+            lambda x: NamedSharding(self.mesh, self.stacked_spec(x)), tree
+        )
+
+    def block_pspecs(self, block_tree: Any) -> Any:
+        """Model-axis layout for one block's weights/masks (and, by
+        inheritance inside the fused dispatch, its Adam moments)."""
+        return SH.param_pspecs(block_tree, self.mesh)
+
+    def block_shardings(self, block_tree: Any) -> Any:
+        return SH.named(self.block_pspecs(block_tree), self.mesh)
+
+    # -- placement ----------------------------------------------------------
+    def put_stacked(self, tree: Any) -> Any:
+        """Data-shard a stacked-stream pytree (no-op for inactive plans)."""
+        if not self.active:
+            return tree
+        return jax.device_put(tree, self.stacked_shardings(tree))
+
+    def put_block(self, block_tree: Any) -> Any:
+        """Model-shard one block's weights or masks (no-op when inactive)."""
+        if not self.active:
+            return block_tree
+        return jax.device_put(block_tree, self.block_shardings(block_tree))
+
+    # -- accounting ---------------------------------------------------------
+    def sharded_bytes(self, tree: Any, specs: Optional[Any] = None) -> int:
+        """Per-device bytes of ``tree`` under ``specs`` (default: the block
+        layout) — the per-shard counterpart of obs.profile.live_bytes."""
+        import numpy as np
+
+        if not self.active:
+            return int(sum(
+                int(np.prod(np.shape(x)))
+                * np.dtype(getattr(x, "dtype", np.float32)).itemsize
+                for x in jax.tree.leaves(tree)
+            ))
+        specs = self.block_pspecs(tree) if specs is None else specs
+        total = 0
+        for leaf, spec in zip(
+            jax.tree.leaves(tree),
+            jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)),
+        ):
+            n = int(np.prod(np.shape(leaf)))
+            shards = 1
+            for ax in spec:
+                if ax is None:
+                    continue
+                for a in (ax if isinstance(ax, tuple) else (ax,)):
+                    shards *= SH.mesh_axis_size(self.mesh, a)
+            total += -(-n // shards) * np.dtype(
+                getattr(leaf, "dtype", np.float32)).itemsize
+        return total
+
+    def allreduce_bytes(self, payload_bytes: int) -> int:
+        """Total wire bytes of one ring all-reduce of ``payload_bytes``
+        across the batch axes: 2·(d−1)·payload (reduce-scatter +
+        all-gather, summed over devices). Zero when data_size == 1."""
+        d = self.data_size
+        return 0 if d <= 1 else 2 * (d - 1) * int(payload_bytes)
+
+    def explain(self, tree: Any, stacked: bool = False) -> List[Tuple[str, P, bool]]:
+        """(path, spec, sharded?) per leaf — ``sharded?`` False means the
+        divisibility fallback replicated that leaf. Used by the analysis
+        sharding pass and docs/DISTRIBUTED.md examples."""
+        out: List[Tuple[str, P, bool]] = []
+        if self.mesh is None:
+            return out
+        if stacked:
+            flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+            for path, leaf in flat:
+                spec = self.stacked_spec(leaf)
+                name = "/".join(str(getattr(k, "key", k)) for k in path) or "leaf"
+                out.append((name, spec, any(a is not None for a in spec)))
+            return out
+        specs = self.block_pspecs(tree)
+        flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+        spec_leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+        for (path, _leaf), spec in zip(flat, spec_leaves):
+            name = "/".join(str(getattr(k, "key", k)) for k in path)
+            out.append((name, spec, any(a is not None for a in spec)))
+        return out

@@ -1,3 +1,84 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Custom-kernel registry: one entry point, uniform signatures.
+
+Every kernel package under here exposes ``ops.call(*operands,
+interpret=False, **params)`` — the uniform wrapper signature — plus its
+historical named entry points. :func:`dispatch` is the single way in:
+
+    from repro import kernels
+    out = kernels.dispatch("masked_matmul", x, w, m)
+    out = kernels.dispatch("flash_attention", q, k, v, layout="bshd")
+
+Dispatch resolves lazily (importing ``repro.kernels`` never imports jax
+or Pallas), so the registry is safe to touch from tooling. The old names
+(``kernels.masked_matmul`` etc.) remain as thin aliases over dispatch.
+
+This layer is OPTIONAL per-paper: packages exist only for compute
+hot-spots the paper itself optimizes (DESIGN.md §Kernels).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Any, Tuple
+
+_REGISTRY = {
+    "masked_matmul": "repro.kernels.masked_matmul.ops",
+    "nm_spmm": "repro.kernels.nm_spmm.ops",
+    "flash_attention": "repro.kernels.flash_attention.ops",
+}
+
+
+def names() -> Tuple[str, ...]:
+    """Registered kernel names, stable order."""
+    return tuple(_REGISTRY)
+
+
+def dispatch(name: str, *operands: Any, interpret: bool = False, **params: Any):
+    """Run kernel ``name`` on ``operands`` through its uniform wrapper.
+
+    The wrapper picks the backend (Pallas on TPU, interpreted Pallas
+    under ``interpret=True``, jnp oracle otherwise) and books roofline
+    accounting when observability is live.
+    """
+    module = _REGISTRY.get(name)
+    if module is None:
+        raise KeyError(
+            f"unknown kernel {name!r}; registered: {', '.join(_REGISTRY)}"
+        )
+    mod = importlib.import_module(module)
+    _restore_aliases()
+    return mod.call(*operands, interpret=interpret, **params)
+
+
+# thin aliases: the pre-dispatch spellings, kept for existing callers
+def masked_matmul(*operands, interpret: bool = False, **params):
+    return dispatch("masked_matmul", *operands, interpret=interpret, **params)
+
+
+def nm_spmm(*operands, interpret: bool = False, **params):
+    return dispatch("nm_spmm", *operands, interpret=interpret, **params)
+
+
+def flash_attention(*operands, interpret: bool = False, **params):
+    return dispatch("flash_attention", *operands, interpret=interpret, **params)
+
+
+def flash_attention_bshd(*operands, interpret: bool = False, **params):
+    return dispatch("flash_attention", *operands, interpret=interpret,
+                    layout="bshd", **params)
+
+
+_ALIASES = {
+    "masked_matmul": masked_matmul,
+    "nm_spmm": nm_spmm,
+    "flash_attention": flash_attention,
+}
+
+
+def _restore_aliases() -> None:
+    # importing a subpackage rebinds its name on this package (standard
+    # Python submodule semantics), shadowing the same-named alias above;
+    # rebind the callables so `kernels.masked_matmul(...)` keeps working
+    g = globals()
+    for name, fn in _ALIASES.items():
+        if not callable(g.get(name)):
+            g[name] = fn

@@ -43,6 +43,15 @@ def flash_attention(q, k, v, *, causal=True, q_offset=0, interpret=False, **tile
     return record_kernel("kernels/flash_attention", flops, traffic, run)
 
 
+def call(*operands, interpret: bool = False, **params):
+    """Uniform kernel entry point (see repro.kernels.dispatch): operands
+    are ``(q, k, v)`` in (BH, S, hd) layout; pass ``layout="bshd"`` for
+    the model-layer (B, S, H, hd) layout."""
+    if params.pop("layout", "bh_s_d") == "bshd":
+        return flash_attention_bshd(*operands, interpret=interpret, **params)
+    return flash_attention(*operands, interpret=interpret, **params)
+
+
 def flash_attention_bshd(q, k, v, *, causal=True, q_offset=0, interpret=False):
     """q (B, Sq, H, hd); k/v (B, Sk, H, hd) already GQA-repeated."""
     B, Sq, H, hd = q.shape

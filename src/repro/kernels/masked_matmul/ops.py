@@ -35,3 +35,9 @@ def masked_matmul(x, w, m, interpret: bool = False, **tiles):
     traffic = (x.size * x.dtype.itemsize + w.size * w.dtype.itemsize
                + m.size * m.dtype.itemsize + rows * N * x.dtype.itemsize)
     return record_kernel("kernels/masked_matmul", flops, traffic, run)
+
+
+def call(*operands, interpret: bool = False, **params):
+    """Uniform kernel entry point (see repro.kernels.dispatch): operands
+    are ``(x, w, m)``, params are the tile-size overrides."""
+    return masked_matmul(*operands, interpret=interpret, **params)

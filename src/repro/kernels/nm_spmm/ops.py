@@ -37,3 +37,9 @@ def nm_spmm(x, vals, idx, *, n, m, interpret: bool = False, **tiles):
     traffic = (x.size * x.dtype.itemsize + vals.size * vals.dtype.itemsize
                + idx.size * idx.dtype.itemsize + rows * N * x.dtype.itemsize)
     return record_kernel("kernels/nm_spmm", flops, traffic, run)
+
+
+def call(*operands, interpret: bool = False, **params):
+    """Uniform kernel entry point (see repro.kernels.dispatch): operands
+    are ``(x, vals, idx)``, params must include ``n`` and ``m``."""
+    return nm_spmm(*operands, interpret=interpret, **params)

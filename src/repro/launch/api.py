@@ -1,0 +1,286 @@
+"""RunSpec — the one typed description of a launcher invocation.
+
+Every driver under ``repro.launch`` (ebft_run, train, serve, dryrun) is
+constructed from a :class:`RunSpec` instead of its own argparse soup:
+
+    spec = RunSpec.from_argv("ebft", argv)     # CLI -> spec
+    run  = spec.start_obs_run()                # obs manifest from the spec
+    ...
+    manifest_extra = spec.to_manifest()        # BENCH_*.json header
+    spec2 = RunSpec.from_manifest(payload["manifest"])  # artifact -> spec
+
+The flag surface stays what it was — ``from_argv`` builds the per-kind
+parser from one declarative table — but the *source of truth* for what a
+run was is now a value that round-trips: argv -> spec -> manifest -> spec.
+
+Deprecated flags (the pre-RunSpec spellings) still parse through a shim
+that stores into the canonical destination and warns ONCE per flag per
+process (``DeprecationWarning``). In-repo callers must use the canonical
+spellings — the ``repro.analysis`` source lint (API001) fails on the
+unambiguous deprecated ones, and this module is the single place the old
+spellings are allowed to appear.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import warnings
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+KINDS = ("ebft", "train", "serve", "dryrun")
+
+# canonical flag -> deprecated aliases, per kind. ``--batch`` stays
+# canonical for ebft/train (it really is a batch size there); serve's old
+# ``--batch`` meant decode slots, hence the rename.
+_DEPRECATED: Dict[str, Dict[str, str]] = {
+    "ebft": {"--lr": "--ebft-lr", "--epochs": "--ebft-epochs"},
+    "train": {"--mesh-data": "--data", "--mesh-model": "--model-axis"},
+    "serve": {"--slots": "--batch"},
+    "dryrun": {},
+}
+
+# deprecated spellings unambiguous enough for the source lint (API001) to
+# flag anywhere in the repo. ``--data``/``--batch`` are generic words and
+# are deliberately excluded.
+LINT_DEPRECATED: Tuple[str, ...] = ("--ebft-lr", "--ebft-epochs", "--model-axis")
+
+_WARNED: set = set()
+
+
+def _reset_deprecation_warnings() -> None:
+    """Test hook: make the warn-once shim fire again."""
+    _WARNED.clear()
+
+
+class _DeprecatedFlag(argparse.Action):
+    """Stores into the canonical dest; warns once per flag per process."""
+
+    def __init__(self, option_strings, dest, canonical: str = "", **kw):
+        kw.setdefault("help", argparse.SUPPRESS)
+        super().__init__(option_strings, dest, **kw)
+        self.canonical = canonical
+
+    def __call__(self, parser, namespace, values, option_string=None):
+        if option_string not in _WARNED:
+            _WARNED.add(option_string)
+            warnings.warn(
+                f"{option_string} is deprecated; use {self.canonical}",
+                DeprecationWarning, stacklevel=2,
+            )
+        setattr(namespace, self.dest, values)
+
+
+# ---------------------------------------------------------------------------
+# the spec
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class RunSpec:
+    """Typed superset of every launcher's knobs; ``kind`` picks the view.
+
+    Fields a kind does not use keep their defaults and are omitted from
+    its manifest (``to_manifest`` writes only that kind's fields).
+    """
+
+    kind: str = "ebft"
+    # -- shared ------------------------------------------------------------
+    arch: str = "tiny_dense"
+    seed: int = 0
+    batch: int = 32
+    seq: int = 128
+    lr: float = 1e-2
+    no_obs: bool = False
+    bench_out: str = ""
+    obs_jsonl: str = ""
+    ckpt_dir: str = ""
+    # -- mesh (ebft + train) ----------------------------------------------
+    mesh_data: int = 0
+    mesh_model: int = 1
+    # -- ebft --------------------------------------------------------------
+    pretrain_steps: int = 200
+    method: str = "wanda"
+    sparsity: float = 0.7
+    pattern: str = ""
+    calib_samples: int = 64
+    epochs: int = 10
+    no_fused_epochs: bool = False
+    prefetch_depth: int = 1
+    baselines: str = ""
+    # -- train -------------------------------------------------------------
+    steps: int = 100
+    microbatches: int = 1
+    compress: float = 1.0
+    ckpt_every: int = 50
+    # -- serve -------------------------------------------------------------
+    requests: int = 12
+    slots: int = 4
+    prompt_len: int = 32
+    max_new: int = 16
+    max_len: int = 128
+    sparse: float = 0.0
+    temperature: float = 0.0
+    # -- dryrun ------------------------------------------------------------
+    shape: str = "all"
+    mesh: str = "both"
+    out: str = "experiments/dryrun"
+    tag: str = "baseline"
+    fsdp: str = "auto"
+    skip_existing: bool = False
+    assume_flash: bool = False
+    ebft_dp: bool = False
+
+    # -- construction ------------------------------------------------------
+    @staticmethod
+    def from_argv(kind: str, argv: Optional[Sequence[str]] = None) -> "RunSpec":
+        if kind not in KINDS:
+            raise ValueError(f"unknown launcher kind {kind!r}; one of {KINDS}")
+        args = build_parser(kind).parse_args(argv)
+        fields = {f.name for f in dataclasses.fields(RunSpec)}
+        return RunSpec(kind=kind, **{
+            k: v for k, v in vars(args).items() if k in fields
+        })
+
+    @staticmethod
+    def from_manifest(manifest: Dict[str, Any]) -> "RunSpec":
+        """Rebuild the spec from a BENCH_*.json manifest (round-trip)."""
+        spec = manifest.get("run_spec")
+        if not isinstance(spec, dict):
+            raise ValueError("manifest carries no 'run_spec' section")
+        fields = {f.name for f in dataclasses.fields(RunSpec)}
+        return RunSpec(**{k: v for k, v in spec.items() if k in fields})
+
+    # -- views -------------------------------------------------------------
+    def fields_for_kind(self) -> List[str]:
+        return list(_KIND_FIELDS[self.kind])
+
+    def to_manifest(self) -> Dict[str, Any]:
+        """Manifest header for obs runs and BENCH_*.json artifacts.
+
+        ``run_spec`` holds every field this kind uses (the round-trip
+        payload); the flat legacy keys the existing artifacts/tests read
+        (``ebft_lr``, ``seq``, ...) are kept alongside it.
+        """
+        used = {name: getattr(self, name) for name in _KIND_FIELDS[self.kind]}
+        out: Dict[str, Any] = {"run_spec": {"kind": self.kind, **used}}
+        if self.kind == "ebft":
+            out.update({
+                "ebft_lr": self.lr, "ebft_epochs": self.epochs,
+                "calib_samples": self.calib_samples, "seq": self.seq,
+                "seed": self.seed,
+                "fused_epochs": not self.no_fused_epochs,
+                "prefetch_depth": self.prefetch_depth,
+                "mesh": {"data": self.mesh_data, "model": self.mesh_model},
+            })
+        elif self.kind == "train":
+            out.update({"steps": self.steps, "batch": self.batch,
+                        "seq": self.seq})
+        elif self.kind == "serve":
+            out.update({"batch_slots": self.slots, "requests": self.requests})
+        return out
+
+    def start_obs_run(self, name: Optional[str] = None, **kw):
+        """``obs.run.start_run`` with this spec as the manifest source.
+
+        Returns None when the spec says ``--no-obs``, so drivers can write
+        ``run = spec.start_obs_run()`` unconditionally.
+        """
+        if self.no_obs:
+            return None
+        from repro.obs.run import start_run
+
+        base: Dict[str, Any] = {"config": self.arch}
+        if self.kind == "ebft":
+            base.update(method=self.method, sparsity=self.sparsity,
+                        pattern=self.pattern or None,
+                        jsonl_path=self.obs_jsonl or None)
+        if self.kind == "serve":
+            base.update(sparsity=self.sparse or None)
+        base["extra_manifest"] = self.to_manifest()
+        base.update(kw)
+        default_name = "ebft_run" if self.kind == "ebft" else self.kind
+        return start_run(name or default_name, **base)
+
+
+# per-kind field lists (order = CLI help order)
+_KIND_FIELDS: Dict[str, Tuple[str, ...]] = {
+    "ebft": ("arch", "pretrain_steps", "batch", "seq", "method", "sparsity",
+             "pattern", "calib_samples", "lr", "epochs", "no_fused_epochs",
+             "prefetch_depth", "baselines", "mesh_data", "mesh_model", "seed",
+             "no_obs", "bench_out", "obs_jsonl"),
+    "train": ("arch", "steps", "batch", "seq", "lr", "microbatches",
+              "compress", "ckpt_dir", "ckpt_every", "mesh_data", "mesh_model",
+              "seed", "no_obs", "bench_out"),
+    "serve": ("arch", "requests", "slots", "prompt_len", "max_new", "max_len",
+              "sparse", "ckpt_dir", "temperature", "seed", "no_obs",
+              "bench_out"),
+    "dryrun": ("arch", "shape", "mesh", "out", "tag", "fsdp", "microbatches",
+               "skip_existing", "assume_flash", "ebft_dp"),
+}
+
+# per-kind default overrides (where kinds disagree on a shared field)
+_KIND_DEFAULTS: Dict[str, Dict[str, Any]] = {
+    "ebft": {"bench_out": "BENCH_ebft.json", "mesh_data": 1},
+    "train": {"batch": 16, "lr": 3e-3},
+    "serve": {},
+    "dryrun": {"arch": "all", "microbatches": 0},
+}
+
+# flag metadata where the add_argument call is not derivable from the
+# dataclass field alone
+_FLAG_KW: Dict[str, Dict[str, Any]] = {
+    "method": {"choices": ["magnitude", "wanda", "sparsegpt", "dsnot", "flap"]},
+    "pattern": {"help": "N:M e.g. 2:4"},
+    "no_fused_epochs": {"help": "run the legacy per-microbatch tune loop "
+                                "instead of the fused scanned+donated "
+                                "dispatch"},
+    "prefetch_depth": {"help": "teacher stream dispatched this many blocks "
+                               "ahead of the tuner (0 = strictly serial)"},
+    "baselines": {"help": "comma list of {dsnot,mask,lora} to also run"},
+    "mesh_data": {"help": "data-axis size for the calibration mesh "
+                          "(0 = auto, 1x1 = single device)"},
+    "mesh_model": {"help": "model-axis size for the calibration mesh"},
+    "no_obs": {"help": "disable observability (no artifact, no metrics)"},
+    "bench_out": {"help": "run-artifact path (JSON summary)"},
+    "obs_jsonl": {"help": "optional JSONL event-stream path"},
+    "compress": {"help": "<1: top-k gradient compression ratio "
+                         "(with error feedback)"},
+    "slots": {"help": "continuous-batching decode slots"},
+    "mesh": {"choices": ["single", "multi", "both"]},
+    "fsdp": {"choices": ["auto", "on", "off"]},
+    "assume_flash": {"help": "memory-model the attention score pipeline as "
+                             "VMEM-resident (the Pallas flash kernel's HBM "
+                             "traffic) instead of the portable chunked "
+                             "path's"},
+    "ebft_dp": {"help": "pure-DP layout for ebft_block cells (block-local "
+                        "weights replicated; see steps.build_ebft_cell)"},
+}
+
+
+def build_parser(kind: str) -> argparse.ArgumentParser:
+    """The canonical parser for one launcher kind, plus deprecated shims."""
+    ap = argparse.ArgumentParser(prog=f"python -m repro.launch.{_PROG[kind]}")
+    defaults = _KIND_DEFAULTS[kind]
+    by_name = {f.name: f for f in dataclasses.fields(RunSpec)}
+    for name in _KIND_FIELDS[kind]:
+        f = by_name[name]
+        flag = "--" + name.replace("_", "-")
+        default = defaults.get(name, f.default)
+        kw = dict(_FLAG_KW.get(name, {}))
+        if f.type in ("bool", bool):
+            ap.add_argument(flag, action="store_true", default=default, **kw)
+        else:
+            typ = {"int": int, "float": float, "str": str}.get(f.type, str) \
+                if isinstance(f.type, str) else f.type
+            ap.add_argument(flag, type=typ, default=default, **kw)
+    # the old spellings: parse, warn once, store canonically
+    for canonical, old in _DEPRECATED[kind].items():
+        dest = canonical.lstrip("-").replace("-", "_")
+        f = by_name[dest]
+        typ = {"int": int, "float": float, "str": str}.get(f.type, str) \
+            if isinstance(f.type, str) else f.type
+        ap.add_argument(old, action=_DeprecatedFlag, canonical=canonical,
+                        dest=dest, type=typ)
+    return ap
+
+
+_PROG = {"ebft": "ebft_run", "train": "train", "serve": "serve",
+         "dryrun": "dryrun"}

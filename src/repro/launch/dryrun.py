@@ -22,7 +22,6 @@ Each cell writes experiments/dryrun/<tag>/<arch>__<shape>__<mesh>.json with:
                        collective wire bytes — see launch/hlo_analysis.py)
     roofline          (three terms, bottleneck, useful ratio, fraction)
 """
-import argparse
 import json
 import time
 import traceback
@@ -135,46 +134,31 @@ def run_cell(
     return rec
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="all")
-    ap.add_argument("--shape", default="all")
-    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
-    ap.add_argument("--out", default="experiments/dryrun")
-    ap.add_argument("--tag", default="baseline")
-    ap.add_argument("--fsdp", default="auto", choices=["auto", "on", "off"])
-    ap.add_argument("--microbatches", type=int, default=0)
-    ap.add_argument("--skip-existing", action="store_true")
-    ap.add_argument("--assume-flash", action="store_true",
-                    help="memory-model the attention score pipeline as "
-                         "VMEM-resident (the Pallas flash kernel's HBM "
-                         "traffic) instead of the portable chunked path's")
-    ap.add_argument("--ebft-dp", action="store_true",
-                    help="pure-DP layout for ebft_block cells (block-local "
-                         "weights replicated; see steps.build_ebft_cell)")
-    args = ap.parse_args()
+def main(argv=None) -> None:
+    from repro.launch.api import RunSpec
 
-    archs = list_configs() if args.arch == "all" else args.arch.split(",")
-    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
-    fsdp = None if args.fsdp == "auto" else (args.fsdp == "on")
-    mb = args.microbatches or None
-    out_dir = os.path.join(args.out, args.tag)
+    spec = RunSpec.from_argv("dryrun", argv)
+    archs = list_configs() if spec.arch == "all" else spec.arch.split(",")
+    meshes = ["single", "multi"] if spec.mesh == "both" else [spec.mesh]
+    fsdp = None if spec.fsdp == "auto" else (spec.fsdp == "on")
+    mb = spec.microbatches or None
+    out_dir = os.path.join(spec.out, spec.tag)
 
     failures = 0
     for arch in archs:
         cfg = get_config(arch)
         shape_names = (
-            [s.name for s in cfg.shapes()] if args.shape == "all"
-            else args.shape.split(",")
+            [s.name for s in cfg.shapes()] if spec.shape == "all"
+            else spec.shape.split(",")
         )
         for shape_name in shape_names:
             for mesh_name in meshes:
                 rec = run_cell(
                     arch, shape_name, mesh_name, out_dir,
                     fsdp=fsdp, microbatches=mb,
-                    skip_existing=args.skip_existing,
-                    assume_flash=args.assume_flash,
-                    ebft_dp=args.ebft_dp,
+                    skip_existing=spec.skip_existing,
+                    assume_flash=spec.assume_flash,
+                    ebft_dp=spec.ebft_dp,
                 )
                 failures += int("error" in rec)
     print(f"\ndry-run complete; failures={failures}")

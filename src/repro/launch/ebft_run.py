@@ -2,7 +2,7 @@
 -> evaluate, with every baseline selectable.
 
     python -m repro.launch.ebft_run --arch tiny_dense --pretrain-steps 200 \
-        --method wanda --sparsity 0.7 --ebft-lr 1e-2
+        --method wanda --sparsity 0.7 --lr 1e-2
 
 Compares (per the paper's tables): no fine-tuning, DSnoT, mask-tuning,
 LoRA and EBFT on held-out perplexity. On the container this runs the tiny
@@ -10,16 +10,26 @@ configs; with real devices the identical driver handles the assigned
 archs (the walk is block-streamed, so memory stays one-block-sized —
 the paper's 16 GB property).
 
+``--mesh-data``/``--mesh-model`` shard the calibration walk across a
+device mesh (docs/DISTRIBUTED.md); the default (1x1) is the bit-for-bit
+single-device path. CPU repro of the sharded walk::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m repro.launch.ebft_run --mesh-data 4 --mesh-model 2 ...
+
+The CLI is one view of :class:`repro.launch.api.RunSpec` — the old
+``--ebft-*`` flag spellings still parse through the deprecation shim.
+
 Fully instrumented via repro.obs (docs/OBSERVABILITY.md): every phase is
 a span, per-block reconstruction data flows into the metrics registry,
 and the run writes a ``BENCH_ebft.json`` artifact (manifest + phases +
-per-block losses + peak live-block bytes + perplexities) that
-``python -m repro.obs report`` renders. ``--no-obs`` disables all of it;
-the console output is identical either way (it is just a sink).
+per-block losses + peak live-block bytes + per-device dispatch ledger +
+collective bytes + perplexities) that ``python -m repro.obs report``
+renders. ``--no-obs`` disables all of it; the console output is
+identical either way (it is just a sink).
 """
 from __future__ import annotations
 
-import argparse
 import time
 
 import jax
@@ -32,10 +42,11 @@ from repro.core.masks import prune
 from repro.data.tokens import (
     CorpusConfig, SyntheticCorpus, calibration_set, corpus_iterator, eval_set,
 )
+from repro.launch.api import RunSpec
+from repro.launch.mesh import make_ebft_plan
 from repro.models.model import build
 from repro.obs import metrics as OM
 from repro.obs import trace as OT
-from repro.obs.run import start_run
 from repro.optim.optimizers import adamw
 from repro.training.train_loop import make_train_step
 
@@ -82,88 +93,53 @@ def pretrain(model, params, corpus, steps: int, batch: int, seq: int, lr: float,
 
 
 def main(argv=None) -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="tiny_dense")
-    ap.add_argument("--pretrain-steps", type=int, default=200)
-    ap.add_argument("--batch", type=int, default=32)
-    ap.add_argument("--seq", type=int, default=128)
-    ap.add_argument("--method", default="wanda",
-                    choices=["magnitude", "wanda", "sparsegpt", "dsnot", "flap"])
-    ap.add_argument("--sparsity", type=float, default=0.7)
-    ap.add_argument("--pattern", default="", help="N:M e.g. 2:4")
-    ap.add_argument("--calib-samples", type=int, default=64)
-    ap.add_argument("--ebft-lr", type=float, default=1e-2)
-    ap.add_argument("--ebft-epochs", type=int, default=10)
-    ap.add_argument("--no-fused-epochs", action="store_true",
-                    help="run the legacy per-microbatch tune loop instead "
-                         "of the fused scanned+donated dispatch")
-    ap.add_argument("--prefetch-depth", type=int, default=1,
-                    help="teacher stream dispatched this many blocks ahead "
-                         "of the tuner (0 = strictly serial)")
-    ap.add_argument("--baselines", default="",
-                    help="comma list of {dsnot,mask,lora} to also run")
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--no-obs", action="store_true",
-                    help="disable observability (no artifact, no metrics)")
-    ap.add_argument("--bench-out", default="BENCH_ebft.json",
-                    help="run-artifact path (JSON summary)")
-    ap.add_argument("--obs-jsonl", default="",
-                    help="optional JSONL event-stream path")
-    args = ap.parse_args(argv)
-
-    run = None
-    if not args.no_obs:
-        run = start_run(
-            "ebft_run", config=args.arch, method=args.method,
-            sparsity=args.sparsity, pattern=args.pattern or None,
-            jsonl_path=args.obs_jsonl or None,
-            extra_manifest={
-                "ebft_lr": args.ebft_lr, "ebft_epochs": args.ebft_epochs,
-                "calib_samples": args.calib_samples, "seq": args.seq,
-                "seed": args.seed,
-                "fused_epochs": not args.no_fused_epochs,
-                "prefetch_depth": args.prefetch_depth,
-            },
-        )
+    spec = RunSpec.from_argv("ebft", argv)
+    run = spec.start_obs_run()
     say = run.say if run is not None else print
 
-    cfg = get_config(args.arch)
+    plan = make_ebft_plan(spec.mesh_data, spec.mesh_model)
+    if plan.active:
+        say(f"calibration mesh: {plan.describe()['axes']} "
+            f"({plan.device_count} devices)")
+
+    cfg = get_config(spec.arch)
     model = build(cfg)
-    corpus = SyntheticCorpus(CorpusConfig(vocab_size=cfg.vocab_size, seed=args.seed))
-    params = model.init(jax.random.PRNGKey(args.seed))
+    corpus = SyntheticCorpus(CorpusConfig(vocab_size=cfg.vocab_size, seed=spec.seed))
+    params = model.init(jax.random.PRNGKey(spec.seed))
     phases = {}
     ppl = {}
 
-    if args.pretrain_steps:
-        with _phase("phase/pretrain", steps=args.pretrain_steps) as sp:
+    if spec.pretrain_steps:
+        with _phase("phase/pretrain", steps=spec.pretrain_steps) as sp:
             params = sp.fence(pretrain(model, params, corpus,
-                                       args.pretrain_steps, args.batch,
-                                       args.seq, 3e-3, say=say))
+                                       spec.pretrain_steps, spec.batch,
+                                       spec.seq, 3e-3, say=say))
         phases["pretrain"] = sp.duration
 
-    calib = calibration_set(corpus, args.calib_samples, args.seq)
-    ev = eval_set(corpus, 16, args.seq)
-    pattern = tuple(int(x) for x in args.pattern.split(":")) if args.pattern else None
+    calib = calibration_set(corpus, spec.calib_samples, spec.seq)
+    ev = eval_set(corpus, 16, spec.seq)
+    pattern = tuple(int(x) for x in spec.pattern.split(":")) if spec.pattern else None
 
     with _phase("phase/eval", what="dense") as sp:
         ppl["dense"] = perplexity(model, params, ev)
     phases["eval_dense"] = sp.duration
     say(f"dense ppl          {ppl['dense']:8.2f}")
 
-    with _phase("phase/prune", method=args.method,
-                 sparsity=args.sparsity) as sp:
-        masks, pruned = prune(model, params, calib, method=args.method,
-                              sparsity=args.sparsity, pattern=pattern)
+    with _phase("phase/prune", method=spec.method,
+                 sparsity=spec.sparsity) as sp:
+        masks, pruned = prune(model, params, calib, method=spec.method,
+                              sparsity=spec.sparsity, pattern=pattern)
         sp.fence(pruned)
     phases["prune"] = sp.duration
-    ppl[args.method] = perplexity(model, pruned, ev)
-    say(f"{args.method} ppl {' ' * (10 - len(args.method))}"
-        f"{ppl[args.method]:8.2f}   ({phases['prune']:.0f}s)")
+    ppl[spec.method] = perplexity(model, pruned, ev)
+    say(f"{spec.method} ppl {' ' * (10 - len(spec.method))}"
+        f"{ppl[spec.method]:8.2f}   ({phases['prune']:.0f}s)")
 
-    ecfg = ebft.EBFTConfig(lr=args.ebft_lr, epochs=args.ebft_epochs,
-                           fused_epochs=not args.no_fused_epochs,
-                           prefetch_depth=args.prefetch_depth)
-    with _phase("phase/ebft", lr=args.ebft_lr, epochs=args.ebft_epochs) as sp:
+    ecfg = ebft.EBFTConfig(lr=spec.lr, epochs=spec.epochs,
+                           fused_epochs=not spec.no_fused_epochs,
+                           prefetch_depth=spec.prefetch_depth,
+                           mesh_plan=plan)
+    with _phase("phase/ebft", lr=spec.lr, epochs=spec.epochs) as sp:
         tuned, reports = ebft.finetune(model, params, pruned, masks, calib, ecfg)
         sp.fence(tuned)
     phases["ebft"] = sp.duration
@@ -176,25 +152,25 @@ def main(argv=None) -> None:
         f"({phases['ebft']:.0f}s, {len(reports)} blocks, "
         f"mean E drop {mean_drop:.3e})")
 
-    wants = set(args.baselines.split(",")) if args.baselines else set()
+    wants = set(spec.baselines.split(",")) if spec.baselines else set()
     if "dsnot" in wants:
         with _phase("phase/baseline", which="dsnot") as sp:
             _, ds = prune(model, params, calib, method="dsnot",
-                          sparsity=args.sparsity, pattern=pattern,
-                          dsnot_init=args.method if args.method != "dsnot" else "wanda")
+                          sparsity=spec.sparsity, pattern=pattern,
+                          dsnot_init=spec.method if spec.method != "dsnot" else "wanda")
             ppl["DSnoT"] = perplexity(model, ds, ev)
         phases["baseline_dsnot"] = sp.duration
         say(f"DSnoT ppl          {ppl['DSnoT']:8.2f}   ({sp.duration:.0f}s)")
     if "mask" in wants:
         with _phase("phase/baseline", which="mask") as sp:
             mt, _ = mask_tuning.finetune_masks(model, params, masks,
-                                               args.sparsity, calib, pattern=pattern)
+                                               spec.sparsity, calib, pattern=pattern)
             ppl["mask-tune"] = perplexity(model, mt, ev)
         phases["baseline_mask"] = sp.duration
         say(f"mask-tune ppl      {ppl['mask-tune']:8.2f}   ({sp.duration:.0f}s)")
     if "lora" in wants:
         with _phase("phase/baseline", which="lora") as sp:
-            it = corpus_iterator(corpus, batch=8, seq_len=args.seq, seed=9)
+            it = corpus_iterator(corpus, batch=8, seq_len=spec.seq, seed=9)
             lr_params = lora.finetune_lora(model, pruned, masks, it,
                                            lora.LoRAConfig(steps=200, lr=1e-3))
             ppl["LoRA"] = perplexity(model, lr_params, ev)
@@ -204,10 +180,12 @@ def main(argv=None) -> None:
     if run is not None:
         summ = OM.summary()
         peak = summ.get("ebft/live_block_bytes", {}).get("max")
+        peak_shard = summ.get(
+            "ebft/live_block_bytes_per_shard", {}).get("max")
         tune_max = max((r.dispatches for r in reports), default=0)
         sync_max = max((r.host_syncs for r in reports), default=0)
         fused_all = bool(reports) and all(r.path == "fused" for r in reports)
-        path = args.bench_out
+        path = spec.bench_out
         run.finish(
             extra={
                 "phases": phases,
@@ -217,16 +195,25 @@ def main(argv=None) -> None:
                     "num_blocks": len(reports),
                     "mean_e_drop": mean_drop,
                     "peak_live_block_bytes": peak,
-                    "fused_epochs": not args.no_fused_epochs,
-                    "prefetch_depth": args.prefetch_depth,
+                    "fused_epochs": not spec.no_fused_epochs,
+                    "prefetch_depth": spec.prefetch_depth,
                     "early_stops": {
                         reason: sum(1 for r in reports if r.early_stop == reason)
                         for reason in {r.early_stop for r in reports}
                     },
                 },
+                # device layout + wire accounting (docs/DISTRIBUTED.md):
+                # inactive plans report devices=1 and zero collective bytes
+                "mesh": {
+                    **plan.describe(),
+                    "peak_live_block_bytes_per_shard": peak_shard,
+                    "collective_bytes_total": sum(
+                        r.collective_bytes for r in reports),
+                },
                 # dispatch/host-sync accounting (docs/PERF.md): per-block =
                 # tune-path dispatches + 2 stream advances (teacher+student)
-                # in the fused/stacked walk
+                # in the fused/stacked walk; device_* = per participating
+                # device (one SPMD launch enqueues on every mesh device)
                 "dispatch": {
                     "tune_per_block_max": tune_max,
                     "tune_host_syncs_per_block_max": sync_max,
@@ -235,6 +222,13 @@ def main(argv=None) -> None:
                     "walk_total": summ.get("ebft/walk/dispatches", {}).get("value"),
                     "walk_host_syncs": summ.get(
                         "ebft/walk/host_syncs", {}).get("value"),
+                    "device_dispatches_per_block": {
+                        str(r.index): r.device_dispatches for r in reports
+                    },
+                    "tune_device_total": summ.get(
+                        "ebft/tune/device_dispatches", {}).get("value"),
+                    "walk_device_total": summ.get(
+                        "ebft/walk/device_dispatches", {}).get("value"),
                 },
                 "walk_phases": {
                     phase: summ.get(f"ebft/walk/{phase}_s", {}).get("sum")

@@ -26,6 +26,36 @@ def make_debug_mesh(data: int = 1, model: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def make_ebft_plan(data: int = 0, model: int = 1):
+    """MeshPlan for the EBFT calibration walk (docs/DISTRIBUTED.md).
+
+    ``data=0`` sizes the data axis to use every device not taken by the
+    model axis; ``data=1, model=1`` (the CLI default) returns the inactive
+    single-device plan, keeping the non-mesh path bit-for-bit unchanged.
+    On CPU the 8-fake-device repro is::
+
+        XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+            python -m repro.launch.ebft_run --mesh-data 4 --mesh-model 2 ...
+    """
+    from repro.distributed.meshplan import MeshPlan
+
+    ndev = jax.device_count()
+    model = max(int(model), 1)
+    if data == 0:
+        data = max(ndev // model, 1)
+    data = max(int(data), 1)
+    if data * model == 1:
+        return MeshPlan.single()
+    if data * model > ndev:
+        raise ValueError(
+            f"mesh ({data} data x {model} model) needs {data * model} "
+            f"devices but only {ndev} exist — set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={data * model} for a "
+            "CPU repro, or shrink the axes"
+        )
+    return MeshPlan.from_mesh(make_debug_mesh(data, model))
+
+
 def make_abstract_mesh(shape, axis_names):
     """Device-free mesh for sharding-rule checks (tests, repro.analysis).
 

@@ -1,15 +1,18 @@
 """Batched serving driver: prefill + decode with continuous batching.
 
     python -m repro.launch.serve --arch tiny_dense --requests 12 \
-        --batch 4 --prompt-len 32 --max-new 16 [--sparse 0.5]
+        --slots 4 --prompt-len 32 --max-new 16 [--sparse 0.5]
 
 ``--sparse`` prunes the (randomly initialised or checkpointed) model with
 Wanda and serves the sparse weights — demonstrating that EBFT-fine-tuned
 sparse params drop into the serving path unchanged (same pytree).
+
+Flags are one view of :class:`repro.launch.api.RunSpec`; ``--slots``
+names the continuous-batching decode slots (the old ``--batch`` spelling
+parses through the deprecation shim).
 """
 from __future__ import annotations
 
-import argparse
 import time
 
 import jax
@@ -19,76 +22,55 @@ from repro.checkpoint import ckpt as CK
 from repro.configs import get_config
 from repro.core.masks import prune
 from repro.data.tokens import CorpusConfig, SyntheticCorpus, calibration_set
+from repro.launch.api import RunSpec
 from repro.models.model import build
 from repro.obs import metrics as OM
-from repro.obs.run import start_run
 from repro.serving.decode import Request, Server
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="tiny_dense")
-    ap.add_argument("--requests", type=int, default=12)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--max-len", type=int, default=128)
-    ap.add_argument("--sparse", type=float, default=0.0)
-    ap.add_argument("--ckpt-dir", default="")
-    ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--no-obs", action="store_true",
-                    help="disable observability (no artifact, no metrics)")
-    ap.add_argument("--bench-out", default="",
-                    help="optional run-artifact path (JSON summary)")
-    args = ap.parse_args()
+def main(argv=None) -> None:
+    spec = RunSpec.from_argv("serve", argv)
+    run = spec.start_obs_run()
 
-    run = None
-    if not args.no_obs:
-        run = start_run("serve", config=args.arch,
-                        sparsity=args.sparse or None,
-                        extra_manifest={"batch_slots": args.batch,
-                                        "requests": args.requests})
-
-    cfg = get_config(args.arch)
+    cfg = get_config(spec.arch)
     model = build(cfg)
-    params = model.init(jax.random.PRNGKey(args.seed))
-    if args.ckpt_dir:
-        latest = CK.latest_step(args.ckpt_dir)
+    params = model.init(jax.random.PRNGKey(spec.seed))
+    if spec.ckpt_dir:
+        latest = CK.latest_step(spec.ckpt_dir)
         if latest is not None:
-            params = CK.restore(args.ckpt_dir, {"params": params})["params"]
+            params = CK.restore(spec.ckpt_dir, {"params": params})["params"]
             print(f"loaded checkpoint step {latest}")
 
-    corpus = SyntheticCorpus(CorpusConfig(vocab_size=cfg.vocab_size, seed=args.seed))
-    if args.sparse > 0:
-        calib = calibration_set(corpus, 16, args.prompt_len)
-        _, params = prune(model, params, calib, method="wanda", sparsity=args.sparse)
-        print(f"serving wanda-pruned weights at sparsity {args.sparse}")
+    corpus = SyntheticCorpus(CorpusConfig(vocab_size=cfg.vocab_size, seed=spec.seed))
+    if spec.sparse > 0:
+        calib = calibration_set(corpus, 16, spec.prompt_len)
+        _, params = prune(model, params, calib, method="wanda", sparsity=spec.sparse)
+        print(f"serving wanda-pruned weights at sparsity {spec.sparse}")
 
-    rng = np.random.default_rng(args.seed)
+    rng = np.random.default_rng(spec.seed)
     reqs = [
-        Request(uid=i, prompt=corpus.sample(rng, args.prompt_len),
-                max_new=args.max_new)
-        for i in range(args.requests)
+        Request(uid=i, prompt=corpus.sample(rng, spec.prompt_len),
+                max_new=spec.max_new)
+        for i in range(spec.requests)
     ]
-    server = Server(model, params, batch_size=args.batch,
-                    max_len=args.max_len, temperature=args.temperature)
+    server = Server(model, params, batch_size=spec.slots,
+                    max_len=spec.max_len, temperature=spec.temperature)
     t0 = time.perf_counter()
     results = server.serve(reqs)
     dt = time.perf_counter() - t0
     toks = sum(len(v) for v in results.values())
     print(f"served {len(results)} requests, {toks} tokens in {dt:.1f}s "
           f"({toks / max(dt, 1e-9):.1f} tok/s, continuous batching over "
-          f"{args.batch} slots)")
+          f"{spec.slots} slots)")
     for uid in sorted(results)[:3]:
         print(f"  req {uid}: {results[uid][:8]}...")
     if run is not None:
         occ = OM.summary().get("serve/batch_occupancy", {})
         print(f"  mean batch occupancy "
-              f"{(occ.get('mean') or 0.0) * 100:.0f}% over {args.batch} slots")
+              f"{(occ.get('mean') or 0.0) * 100:.0f}% over {spec.slots} slots")
         run.finish(extra={"served": {"requests": len(results), "tokens": toks,
                                      "tokens_per_s": toks / max(dt, 1e-9)}},
-                   summary_path=args.bench_out or None)
+                   summary_path=spec.bench_out or None)
 
 
 if __name__ == "__main__":

@@ -12,10 +12,13 @@ launch/steps.py.
 Fault tolerance in action: if ``--ckpt-dir`` has a checkpoint, training
 RESUMES from it (elastic: the restore reshards to the current mesh). Kill
 the process mid-run and relaunch to exercise it.
+
+Flags are one view of :class:`repro.launch.api.RunSpec`; the mesh axes
+are ``--mesh-data``/``--mesh-model`` (the old spellings parse through
+the deprecation shim).
 """
 from __future__ import annotations
 
-import argparse
 import time
 
 import jax
@@ -28,66 +31,43 @@ from repro.configs.base import ShapeConfig
 from repro.data.tokens import CorpusConfig, SyntheticCorpus
 from repro.distributed import sharding as SH
 from repro.launch import steps as ST
+from repro.launch.api import RunSpec
 from repro.launch.mesh import make_debug_mesh
 from repro.models.model import build
 from repro.obs.profile import profiled
-from repro.obs.run import start_run
 from repro.optim.optimizers import adamw
 from repro.optim.schedules import warmup_cosine
 from repro.training.train_loop import Trainer, make_train_step
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="tiny_dense")
-    ap.add_argument("--steps", type=int, default=100)
-    ap.add_argument("--batch", type=int, default=16)
-    ap.add_argument("--seq", type=int, default=128)
-    ap.add_argument("--lr", type=float, default=3e-3)
-    ap.add_argument("--microbatches", type=int, default=1)
-    ap.add_argument("--compress", type=float, default=1.0,
-                    help="<1: top-k gradient compression ratio (with error feedback)")
-    ap.add_argument("--ckpt-dir", default="")
-    ap.add_argument("--ckpt-every", type=int, default=50)
-    ap.add_argument("--data", type=int, default=0, help="data-axis size (0=auto)")
-    ap.add_argument("--model-axis", type=int, default=1)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--no-obs", action="store_true",
-                    help="disable observability (no artifact, no metrics)")
-    ap.add_argument("--bench-out", default="",
-                    help="optional run-artifact path (JSON summary)")
-    args = ap.parse_args()
+def main(argv=None) -> None:
+    spec = RunSpec.from_argv("train", argv)
+    run = spec.start_obs_run()
 
-    run = None
-    if not args.no_obs:
-        run = start_run("train", config=args.arch,
-                        extra_manifest={"steps": args.steps,
-                                        "batch": args.batch, "seq": args.seq})
-
-    cfg = get_config(args.arch)
+    cfg = get_config(spec.arch)
     model = build(cfg)
     ndev = jax.device_count()
-    data = args.data or (ndev // args.model_axis)
-    mesh = make_debug_mesh(data, args.model_axis)
+    data = spec.mesh_data or (ndev // spec.mesh_model)
+    mesh = make_debug_mesh(data, spec.mesh_model)
     print(f"devices={ndev} mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
 
-    corpus = SyntheticCorpus(CorpusConfig(vocab_size=cfg.vocab_size, seed=args.seed))
-    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    corpus = SyntheticCorpus(CorpusConfig(vocab_size=cfg.vocab_size, seed=spec.seed))
+    shape = ShapeConfig("cli", spec.seq, spec.batch, "train")
 
-    rng = jax.random.PRNGKey(args.seed)
+    rng = jax.random.PRNGKey(spec.seed)
     with mesh:
         params = model.init(rng)
         pspecs = SH.param_pspecs(params, mesh)
         params = jax.device_put(params, SH.named(pspecs, mesh))
-        opt = adamw(warmup_cosine(args.lr, warmup=20, total=max(args.steps, 21)))
+        opt = adamw(warmup_cosine(spec.lr, warmup=20, total=max(spec.steps, 21)))
         opt_state = opt.init(params)
 
         err_state = None
         step_fn = make_train_step(
-            model.loss, opt, microbatches=args.microbatches,
-            compress_ratio=args.compress,
+            model.loss, opt, microbatches=spec.microbatches,
+            compress_ratio=spec.compress,
         )
-        if args.compress < 1.0:
+        if spec.compress < 1.0:
             from repro.optim.grad_compress import init_error_state
             err_state = init_error_state(params)
         # profiled: records compile time vs execution time (no-op when off)
@@ -96,31 +76,31 @@ def main() -> None:
         # deterministic data order: batch is a pure function of step, so any
         # host can recompute it after restart (straggler/fault tolerance).
         def data_fn(step: int):
-            r = np.random.default_rng((args.seed << 20) + step)
+            r = np.random.default_rng((spec.seed << 20) + step)
             toks = np.stack([
-                corpus.sample(r, args.seq) for _ in range(args.batch)
+                corpus.sample(r, spec.seq) for _ in range(spec.batch)
             ])
             batch = {"tokens": jnp.asarray(toks)}
             if cfg.family == "vlm":
-                spec = model.input_specs(shape)
-                P = spec["patches"].shape[1]
-                batch["tokens"] = batch["tokens"][:, : args.seq - P]
+                in_specs = model.input_specs(shape)
+                P = in_specs["patches"].shape[1]
+                batch["tokens"] = batch["tokens"][:, : spec.seq - P]
                 batch["patches"] = jnp.asarray(
-                    r.normal(size=(args.batch, P, cfg.d_model)).astype(np.float32)
+                    r.normal(size=(spec.batch, P, cfg.d_model)).astype(np.float32)
                 )
             if cfg.family == "encdec":
                 F = model.input_specs(shape)["frames"].shape[1]
                 batch["frames"] = jnp.asarray(
-                    r.normal(size=(args.batch, F, cfg.d_model)).astype(np.float32)
+                    r.normal(size=(spec.batch, F, cfg.d_model)).astype(np.float32)
                 )
             return batch
 
         start = 0
-        if args.ckpt_dir:
-            latest = CK.latest_step(args.ckpt_dir)
+        if spec.ckpt_dir:
+            latest = CK.latest_step(spec.ckpt_dir)
             if latest is not None:
                 tree = CK.restore(
-                    args.ckpt_dir, {"params": params, "opt_state": opt_state},
+                    spec.ckpt_dir, {"params": params, "opt_state": opt_state},
                     step=latest,
                 )
                 params, opt_state = tree["params"], tree["opt_state"]
@@ -130,26 +110,26 @@ def main() -> None:
         trainer = Trainer(
             step_fn=jitted,
             data_fn=data_fn,
-            ckpt_dir=args.ckpt_dir or None,
-            ckpt_every=args.ckpt_every,
+            ckpt_dir=spec.ckpt_dir or None,
+            ckpt_every=spec.ckpt_every,
             log_every=10,
         )
         t0 = time.perf_counter()
         params, opt_state, history = trainer.run(
-            params, opt_state, start, args.steps - start, err_state
+            params, opt_state, start, spec.steps - start, err_state
         )
         CK.wait_all()
         dt = time.perf_counter() - t0
         for s, l in history[-5:]:
             print(f"step {s:5d} loss {l:.4f}")
-        print(f"{args.steps - start} steps in {dt:.1f}s "
-              f"({(args.steps - start) / max(dt, 1e-9):.2f} steps/s)")
+        print(f"{spec.steps - start} steps in {dt:.1f}s "
+              f"({(spec.steps - start) / max(dt, 1e-9):.2f} steps/s)")
         if run is not None:
             run.finish(
-                extra={"trained": {"steps": args.steps - start, "seconds": dt,
-                                   "steps_per_s": (args.steps - start) / max(dt, 1e-9),
+                extra={"trained": {"steps": spec.steps - start, "seconds": dt,
+                                   "steps_per_s": (spec.steps - start) / max(dt, 1e-9),
                                    "history": history}},
-                summary_path=args.bench_out or None,
+                summary_path=spec.bench_out or None,
             )
 
 

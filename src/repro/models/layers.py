@@ -189,10 +189,11 @@ def attend(
     k = _repeat_kv(k, h // hkv)
     v = _repeat_kv(v, h // hkv)
     if impl == "flash" and jax.default_backend() == "tpu":
-        from repro.kernels.flash_attention.ops import flash_attention_bshd
+        from repro import kernels
 
         off = q_offset if isinstance(q_offset, int) else 0
-        return flash_attention_bshd(q, k, v, causal=causal, q_offset=off)
+        return kernels.dispatch("flash_attention", q, k, v, layout="bshd",
+                                causal=causal, q_offset=off)
     if impl == "chunked" or impl == "flash":
         # portable equivalent of the Pallas flash kernel (same online-
         # softmax recurrence), used off-TPU

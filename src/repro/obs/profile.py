@@ -78,18 +78,30 @@ class DispatchLedger:
     live, so :class:`~repro.core.ebft.BlockReport` carries real numbers
     even with observability off — and mirrors into the metrics registry
     when one is installed.
+
+    ``devices`` (a mesh-aware walk passes its device count) additionally
+    books every SPMD launch per participating device under
+    ``<name>/device_dispatches`` — one host-side dispatch of an SPMD
+    executable enqueues work on all ``devices`` chips, and the per-device
+    ledger in ``BENCH_ebft.json`` is derived from this counter.
     """
 
-    __slots__ = ("name", "dispatches", "host_syncs")
+    __slots__ = ("name", "dispatches", "host_syncs", "devices")
 
-    def __init__(self, name: str):
+    def __init__(self, name: str, devices: int = 1):
         self.name = name
         self.dispatches = 0
         self.host_syncs = 0
+        self.devices = max(int(devices), 1)
+
+    @property
+    def device_dispatches(self) -> int:
+        return self.dispatches * self.devices
 
     def dispatch(self, n: int = 1) -> None:
         self.dispatches += n
         M.counter(f"{self.name}/dispatches").inc(n)
+        M.counter(f"{self.name}/device_dispatches").inc(n * self.devices)
 
     def host_sync(self, n: int = 1) -> None:
         self.host_syncs += n

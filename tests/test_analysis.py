@@ -12,6 +12,7 @@ import pytest
 from analysis_fixtures import BAD_HEADS, BAD_TILES
 from repro.analysis import Finding, Report, run
 from repro.analysis.config_check import (
+    check_ebft_mesh_plan,
     check_hlo_text,
     check_model_config,
     check_sharding,
@@ -468,3 +469,60 @@ def test_cli_exit_codes_and_json(capsys):
                "--fail-on", "never", "-q"])
     capsys.readouterr()
     assert rc == 0
+
+
+# ---------------------------------------------------------------------------
+# SHD005: EBFT mesh-plan divisibility fallbacks
+# ---------------------------------------------------------------------------
+def test_mesh_plan_clean_layout_has_no_findings():
+    # tiny_dense on a (4, 2) mesh with microbatch 8: batch and every
+    # ruled block leaf divide, so the walk runs fully sharded
+    fs = check_ebft_mesh_plan("tiny_dense", get_config("tiny_dense"),
+                              data=4, model_axis=2, microbatch=8)
+    assert fs == []
+
+
+def test_mesh_plan_flags_indivisible_microbatch():
+    fs = check_ebft_mesh_plan("tiny_dense", get_config("tiny_dense"),
+                              data=4, model_axis=2, microbatch=7)
+    assert any(f.code == "SHD005" and "microbatch=7" in f.message
+               for f in fs)
+    assert all(f.severity == "warn" for f in fs)
+
+
+def test_mesh_plan_flags_block_replication_fallback():
+    # 4 heads on a model axis of 16: the attention leaves have a sharding
+    # rule but fail divisibility, so they replicate — one aggregated warn
+    fs = check_ebft_mesh_plan("tiny_dense", get_config("tiny_dense"),
+                              data=4, model_axis=16, microbatch=8)
+    hits = [f for f in fs if f.code == "SHD005"
+            and f.location == "ebft.block0"]
+    assert len(hits) == 1
+    assert "attn/wq" in hits[0].message
+
+
+# ---------------------------------------------------------------------------
+# API001: deprecated launcher flags in in-repo callers
+# ---------------------------------------------------------------------------
+def test_deprecated_flag_lint(tmp_path):
+    from repro.analysis.source_lint import check_deprecated_flags
+
+    (tmp_path / "tests").mkdir()
+    (tmp_path / "tests" / "t.py").write_text(
+        'run(["--ebft-epochs", "4"])\n'  # api: deprecated-ok
+        'run(["--ebft-lr", "0.1"])  # api: deprecated-ok\n'
+        'run(["--epochs", "4"])\n'
+    )
+    fs = check_deprecated_flags(repo_root=str(tmp_path))
+    assert len(fs) == 1
+    f = fs[0]
+    assert f.code == "API001" and f.severity == "error"
+    assert "--ebft-epochs" in f.message  # api: deprecated-ok
+    assert "--epochs" in f.message
+    assert f.location.endswith("t.py:1")
+
+
+def test_deprecated_flag_lint_repo_is_clean():
+    from repro.analysis.source_lint import check_deprecated_flags
+
+    assert check_deprecated_flags() == []

@@ -127,3 +127,53 @@ def test_flash_attention_q_offset_decode_semantics():
     out = FA.flash_attention(q, k, v, causal=True, q_offset=S - 1, interpret=True)
     ref = flash_attention_ref(q, k, v, causal=True, q_offset=S - 1)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# the uniform dispatch surface (repro.kernels.dispatch)
+# ---------------------------------------------------------------------------
+def test_dispatch_registry_names():
+    from repro import kernels
+
+    assert set(kernels.names()) == {
+        "masked_matmul", "nm_spmm", "flash_attention"
+    }
+    with pytest.raises(KeyError, match="unknown kernel"):
+        kernels.dispatch("nope")
+
+
+def test_dispatch_masked_matmul_matches_direct_call():
+    from repro import kernels
+
+    x = _rand((8, 128), jnp.float32)
+    w = _rand((128, 128), jnp.float32)
+    mask = jnp.asarray(RNG.random((128, 128)) > 0.5)
+    out = kernels.dispatch("masked_matmul", x, w, mask, interpret=True)
+    ref = MM.masked_matmul(x, w, mask, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_dispatch_flash_layout_param():
+    from repro import kernels
+
+    B, S, H, hd = 2, 64, 4, 64
+    q = _rand((B, S, H, hd), jnp.float32)
+    out = kernels.dispatch("flash_attention", q, q, q, layout="bshd",
+                           causal=True, interpret=True)
+    ref = FA.flash_attention_bshd(q, q, q, causal=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_package_aliases_survive_submodule_import():
+    """Importing repro.kernels.X.ops rebinds the package attribute 'X' to
+    the subpackage module; dispatch() must restore the callable alias."""
+    from repro import kernels
+
+    kernels.dispatch(
+        "masked_matmul",
+        _rand((8, 128), jnp.float32), _rand((128, 128), jnp.float32),
+        jnp.ones((128, 128), bool), interpret=True,
+    )
+    assert callable(kernels.masked_matmul)
+    assert callable(kernels.nm_spmm)
+    assert callable(kernels.flash_attention)

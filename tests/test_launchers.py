@@ -35,7 +35,7 @@ def test_train_cli_runs_and_resumes(tmp_path):
 @pytest.mark.slow
 def test_serve_cli_continuous_batching():
     out = _run(["repro.launch.serve", "--arch", "tiny_dense", "--requests", "5",
-                "--batch", "2", "--prompt-len", "12", "--max-new", "4",
+                "--slots", "2", "--prompt-len", "12", "--max-new", "4",
                 "--max-len", "32"])
     assert "served 5 requests" in out
 
@@ -44,7 +44,7 @@ def test_serve_cli_continuous_batching():
 def test_ebft_run_cli_orderings():
     out = _run(["repro.launch.ebft_run", "--arch", "tiny_dense",
                 "--pretrain-steps", "120", "--sparsity", "0.7",
-                "--calib-samples", "16", "--ebft-epochs", "4",
+                "--calib-samples", "16", "--epochs", "4",
                 "--seq", "64"], timeout=900)
     # parse the printed perplexities: EBFT must improve on the pruned model
     ppls = {}

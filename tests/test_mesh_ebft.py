@@ -1,0 +1,127 @@
+"""Sharded EBFT calibration walk: numerical parity with the single-device
+path, collective/memory accounting, and the sharded checkpoint round-trip.
+
+Needs >1 device, so everything runs in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (the main test process
+keeps the default single device) — same pattern as test_distribution.py.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.model import build
+from repro.core.masks import prune
+from repro.core import ebft
+from repro.launch.mesh import make_ebft_plan
+
+cfg = get_config("tiny_dense")
+model = build(cfg)
+params = model.init(jax.random.PRNGKey(0))
+rng = np.random.default_rng(0)
+calib = rng.integers(0, cfg.vocab_size, size=(16, 32)).astype(np.int32)
+masks, pruned = prune(model, params, calib, method="magnitude", sparsity=0.5)
+
+base = dict(lr=1e-2, epochs=2, microbatch=8, patience=2)
+out = {"meshes": {}}
+
+# live-byte accounting is obs-gated; run under a (console-less) obs run
+from repro.obs.run import start_run
+run = start_run("mesh_test", config="tiny_dense", console=False)
+
+_, rep_single = ebft.finetune(model, params, pruned, masks, calib,
+                              ebft.EBFTConfig(**base))
+
+for mesh_data, mesh_model in [(8, 1), (4, 2)]:
+    plan = make_ebft_plan(mesh_data, mesh_model)
+    assert plan.active
+    _, rep_mesh = ebft.finetune(model, params, pruned, masks, calib,
+                                ebft.EBFTConfig(**base, mesh_plan=plan))
+    assert len(rep_single) == len(rep_mesh)
+    parity = True
+    for rs, rm in zip(rep_single, rep_mesh):
+        assert rs.path == rm.path == "fused", (rs.path, rm.path)
+        parity = parity and np.allclose(rs.history, rm.history,
+                                        rtol=2e-3, atol=1e-5)
+    r0 = rep_mesh[0]
+    out["meshes"][f"{mesh_data}x{mesh_model}"] = {
+        "parity": bool(parity),
+        "device_dispatches": r0.device_dispatches,
+        "dispatches": r0.dispatches,
+        "devices": plan.device_count,
+        "collective_bytes": r0.collective_bytes,
+        "live_bytes": r0.live_bytes,
+        "live_bytes_per_shard": r0.live_bytes_per_shard,
+    }
+
+run.finish()
+
+# sharded checkpoint round-trip: save from a (4, 2) mesh, restore both
+# onto the same layout (template-derived shardings) and elastically onto
+# a different mesh
+from repro.checkpoint import ckpt as CK
+
+plan = make_ebft_plan(4, 2)
+bp = model.get_block(params, 0)
+bp_sharded = plan.put_block(bp)
+ckdir = os.environ["MESH_CKPT_DIR"]
+CK.save(ckdir, {"block": bp_sharded}, step=1, async_write=False)
+restored = CK.restore(ckdir, {"block": bp_sharded})
+same_layout = all(
+    a.sharding == b.sharding and np.allclose(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(bp_sharded))
+)
+plan2 = make_ebft_plan(8, 1)
+restored2 = CK.restore(ckdir, {"block": plan2.put_block(bp)})
+elastic_ok = all(
+    np.allclose(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(restored2), jax.tree.leaves(bp))
+)
+out["ckpt"] = {"same_layout": bool(same_layout), "elastic": bool(elastic_ok)}
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_mesh_parity_accounting_and_ckpt(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["MESH_CKPT_DIR"] = str(tmp_path / "ck")
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT], env=env, capture_output=True,
+        text=True, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    out = json.loads(line[len("RESULT "):])
+
+    for key, rec in out["meshes"].items():
+        # the sharded fused loop must reproduce the single-device loss
+        # trajectory (GSPMD psum == the unsharded batched gradient)
+        assert rec["parity"], f"mesh {key} diverged from single-device"
+        # one SPMD launch per host dispatch, replicated across devices
+        assert rec["device_dispatches"] == rec["dispatches"] * rec["devices"]
+        # the gradient all-reduce is real wire traffic
+        assert rec["collective_bytes"] > 0
+
+    # model-axis sharding actually splits the live block; pure data
+    # parallelism replicates it
+    assert out["meshes"]["4x2"]["live_bytes_per_shard"] < \
+        out["meshes"]["4x2"]["live_bytes"]
+    assert out["meshes"]["8x1"]["live_bytes_per_shard"] == \
+        out["meshes"]["8x1"]["live_bytes"]
+
+    assert out["ckpt"]["same_layout"]
+    assert out["ckpt"]["elastic"]

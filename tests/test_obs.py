@@ -253,7 +253,7 @@ def test_ebft_run_emits_valid_bench_artifact(tmp_path, capsys):
     jsonl = tmp_path / "events.jsonl"
     ebft_main(["--arch", "tiny_dense", "--pretrain-steps", "30",
                "--batch", "8", "--seq", "32", "--calib-samples", "8",
-               "--ebft-epochs", "2", "--bench-out", str(bench),
+               "--epochs", "2", "--bench-out", str(bench),
                "--obs-jsonl", str(jsonl)])
     console = capsys.readouterr().out
     assert "EBFT ppl" in console  # console sink preserved

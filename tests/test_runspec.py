@@ -1,0 +1,103 @@
+"""RunSpec facade: canonical parsing, the deprecation shim, per-kind
+defaults, and the argv -> spec -> manifest -> spec round-trip."""
+from __future__ import annotations
+
+import warnings
+
+import pytest
+
+from repro.launch.api import (
+    KINDS,
+    RunSpec,
+    _reset_deprecation_warnings,
+    build_parser,
+)
+
+
+def test_canonical_parse_ebft():
+    spec = RunSpec.from_argv("ebft", [
+        "--arch", "tiny_dense", "--lr", "0.5", "--epochs", "3",
+        "--mesh-data", "4", "--mesh-model", "2",
+    ])
+    assert spec.kind == "ebft"
+    assert spec.lr == 0.5 and spec.epochs == 3
+    assert (spec.mesh_data, spec.mesh_model) == (4, 2)
+    assert spec.bench_out == "BENCH_ebft.json"  # per-kind default
+
+
+def test_per_kind_defaults_diverge():
+    t = RunSpec.from_argv("train", [])
+    e = RunSpec.from_argv("ebft", [])
+    assert t.batch == 16 and e.batch == 32
+    assert t.lr == 3e-3 and e.lr == 1e-2
+    # train auto-sizes its mesh from the host (0 = auto, pre-RunSpec
+    # behavior); ebft must stay bit-for-bit single-device by default
+    assert t.mesh_data == 0 and e.mesh_data == 1
+
+
+def test_every_kind_builds_a_parser():
+    for kind in KINDS:
+        ap = build_parser(kind)
+        assert ap.format_help()  # renders without raising
+
+
+def test_unknown_kind_rejected():
+    with pytest.raises(ValueError, match="unknown launcher kind"):
+        RunSpec.from_argv("bogus", [])
+
+
+def test_deprecated_flag_warns_once_and_stores_canonically():
+    _reset_deprecation_warnings()
+    with pytest.warns(DeprecationWarning, match="ebft-lr"):  # api: deprecated-ok
+        spec = RunSpec.from_argv("ebft", ["--ebft-lr", "0.25"])  # api: deprecated-ok
+    assert spec.lr == 0.25
+    # second use in the same process: silent (warn-once)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        spec2 = RunSpec.from_argv("ebft", ["--ebft-lr", "0.125"])  # api: deprecated-ok
+    assert spec2.lr == 0.125
+
+
+def test_serve_batch_means_slots_through_the_shim():
+    _reset_deprecation_warnings()
+    with pytest.warns(DeprecationWarning, match="--slots"):
+        spec = RunSpec.from_argv("serve", ["--batch", "2"])  # api: deprecated-ok
+    assert spec.slots == 2
+
+
+def test_train_mesh_axis_shims():
+    _reset_deprecation_warnings()
+    with pytest.warns(DeprecationWarning):
+        spec = RunSpec.from_argv(
+            "train", ["--data", "4", "--model-axis", "2"])  # api: deprecated-ok
+    assert (spec.mesh_data, spec.mesh_model) == (4, 2)
+
+
+def test_canonical_flag_never_warns():
+    _reset_deprecation_warnings()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        RunSpec.from_argv("ebft", ["--lr", "0.5", "--epochs", "2"])
+
+
+def test_manifest_round_trip():
+    spec = RunSpec.from_argv("ebft", [
+        "--arch", "tiny_moe", "--epochs", "2", "--seq", "64",
+        "--mesh-data", "4", "--mesh-model", "2", "--method", "magnitude",
+    ])
+    man = spec.to_manifest()
+    # flat legacy keys stay readable for existing artifact consumers
+    assert man["ebft_epochs"] == 2
+    assert man["mesh"] == {"data": 4, "model": 2}
+    # and the run_spec section round-trips exactly
+    assert RunSpec.from_manifest(man) == spec
+
+
+def test_from_manifest_requires_run_spec_section():
+    with pytest.raises(ValueError, match="run_spec"):
+        RunSpec.from_manifest({"config": "tiny_dense"})
+
+
+def test_no_obs_short_circuits_start_obs_run():
+    spec = RunSpec.from_argv("ebft", ["--no-obs"])
+    assert spec.start_obs_run() is None
