@@ -19,8 +19,8 @@ import os
 import time
 
 from benchmarks import (
-    fig2_calibration, roofline_report, table1_unstructured, table2_nm,
-    table3_zeroshot, table4_lora, table6_masktuning,
+    bench_kernels, fig2_calibration, roofline_report, table1_unstructured,
+    table2_nm, table3_zeroshot, table4_lora, table6_masktuning,
 )
 from benchmarks.common import bench_spec
 from repro.obs.run import start_run
@@ -32,6 +32,7 @@ ALL = {
     "table4": lambda quick: table4_lora.run(quick=quick),
     "fig2": lambda quick: fig2_calibration.run(quick=quick),
     "table6": lambda quick: table6_masktuning.run(quick=quick),
+    "kernels": lambda quick: bench_kernels.run(quick=quick),
 }
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "benchmarks")

@@ -1,6 +1,6 @@
 """repro.analysis — static invariant checkers for the EBFT repro.
 
-Five passes, one report (``python -m repro.analysis``; docs/ANALYSIS.md):
+Six passes, one report (``python -m repro.analysis``; docs/ANALYSIS.md):
 
   * ``kernels``  — Pallas tile divisibility / VMEM budget / BlockSpec
     arity, against the same :mod:`repro.kernels.validation` plans the
@@ -17,7 +17,11 @@ Five passes, one report (``python -m repro.analysis``; docs/ANALYSIS.md):
     hot-path packages and non-monotonic ``time.time()`` anywhere in
     ``src/repro`` must go through repro.obs instead (OBS0xx); deprecated
     launcher flags in in-repo callers fail the build (API001 — the
-    RunSpec shim exists for users, not for us).
+    RunSpec shim exists for users, not for us);
+  * ``tuning_cache`` — config-independent validation of the kernel
+    autotuner's persistent plan cache: every entry must rebuild through
+    the live plan builders, fit the VMEM budget, and match the current
+    kernel ``code_rev`` (TUN0xx).
 
 Findings carry stable codes and severities (error/warn/info); the CLI
 exit code is governed by ``--fail-on`` and individual codes can be
@@ -32,8 +36,8 @@ from repro.analysis.passes import PASSES
 from repro.configs import ARCH_IDS, EXTRA_IDS, get_config
 from repro.configs.base import ModelConfig
 
-# per-config passes from PASSES, plus the config-independent source scan
-PASS_NAMES = tuple(PASSES) + ("source_lint",)
+# per-config passes from PASSES, plus the config-independent scans
+PASS_NAMES = tuple(PASSES) + ("source_lint", "tuning_cache")
 
 __all__ = [
     "Finding", "Report", "SEVERITIES", "PASS_NAMES",
@@ -66,12 +70,15 @@ def run(
     extra_configs: Optional[Iterable[Tuple[str, ModelConfig]]] = None,
     hlo_dir: Optional[str] = None,
     total_devices: int = 256,
+    tuning_cache_path: Optional[str] = None,
     progress=None,
 ) -> Report:
     """Run the requested passes over the requested configs.
 
     ``extra_configs`` injects (name, cfg) pairs not in the registry (the
     cfg doubles as its own smoke variant — keep injected configs small).
+    ``tuning_cache_path`` points the ``tuning_cache`` pass at a specific
+    plan-cache file (default: the autotuner's configured path).
     ``progress`` is an optional ``callable(str)`` for per-config status.
     """
     selected = list(passes) if passes else list(PASS_NAMES)
@@ -112,6 +119,20 @@ def run(
         except Exception as e:  # a crashed pass is itself a finding
             report.add([Finding(
                 code="ANA000", severity="error", pass_name="source_lint",
+                location="internal",
+                message=f"pass crashed: {type(e).__name__}: {e}",
+            )])
+
+    if "tuning_cache" in selected:
+        from repro.analysis.tuning_cache import check_cache
+
+        if progress:
+            progress("tuning_cache")
+        try:
+            report.add(check_cache(tuning_cache_path))
+        except Exception as e:  # a crashed pass is itself a finding
+            report.add([Finding(
+                code="ANA000", severity="error", pass_name="tuning_cache",
                 location="internal",
                 message=f"pass crashed: {type(e).__name__}: {e}",
             )])

@@ -46,7 +46,7 @@ def main(argv=None) -> int:
                     help=f"config subset (default: all — "
                          f"{', '.join(ARCH_IDS + EXTRA_IDS)})")
     ap.add_argument("--passes", nargs="*", default=None, choices=PASS_NAMES,
-                    help="pass subset (default: all five)")
+                    help="pass subset (default: all six)")
     ap.add_argument("--fail-on", default="error",
                     choices=("error", "warn", "info", "never"),
                     help="minimum severity that makes the exit code "
@@ -62,6 +62,9 @@ def main(argv=None) -> int:
     ap.add_argument("--total-devices", type=int, default=256,
                     help="device count the HLO dumps were compiled for "
                          "(default: 256 = 16x16 mesh)")
+    ap.add_argument("--tuning-cache", default=None, metavar="PATH",
+                    help="plan-cache file for the tuning_cache pass "
+                         "(default: the autotuner's configured path)")
     ap.add_argument("--extra-config-module", default=None, metavar="MODULE",
                     help="import MODULE and also check its ANALYSIS_CONFIGS "
                          "[(name, ModelConfig), ...]")
@@ -82,6 +85,7 @@ def main(argv=None) -> int:
             extra_configs=extra,
             hlo_dir=args.hlo_dir,
             total_devices=args.total_devices,
+            tuning_cache_path=args.tuning_cache,
             progress=progress,
         ).without(args.ignore)
     except ValueError as e:

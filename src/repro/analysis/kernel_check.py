@@ -34,11 +34,19 @@ from repro.kernels.validation import (
 _TUNE_TOKENS = 8 * 1024
 
 
-def matmul_workloads(cfg: ModelConfig) -> List[Tuple[str, int, int, int]]:
-    """(label, M, K, N) for every distinct weight matmul a block launches."""
+def matmul_workloads(
+    cfg: ModelConfig, tokens: int = _TUNE_TOKENS
+) -> List[Tuple[str, int, int, int]]:
+    """(label, M, K, N) for every distinct weight matmul a block launches.
+
+    ``tokens`` is the matmul's M (calibration microbatch x sequence
+    length); the default is the paper-scale walk, and the kernel
+    autotuner's pre-tune pass (repro.kernels.tuning.ebft_workloads)
+    passes the actual run's size.
+    """
     d, hd = cfg.d_model, cfg.resolved_head_dim
     H, KV = cfg.num_heads, cfg.num_kv_heads
-    M = _TUNE_TOKENS
+    M = tokens
     out: List[Tuple[str, int, int, int]] = []
 
     has_attention = cfg.family != "ssm"

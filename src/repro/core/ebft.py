@@ -62,7 +62,9 @@ from repro.core import reconstruction as R
 from repro.core.pruning import common as C
 from repro.obs import metrics as OM
 from repro.obs import trace as OT
-from repro.obs.profile import DispatchLedger, ebft_live_block_bytes, live_bytes
+from repro.obs.profile import (
+    DispatchLedger, FirstCallTimer, ebft_live_block_bytes, live_bytes,
+)
 from repro.optim.optimizers import adam, apply_updates
 from repro.optim.schedules import plateau_early_stop, plateau_early_stop_device
 from repro.sparsity.sparse_params import apply_masks
@@ -189,7 +191,12 @@ def _make_tune_step(model, kind_rep_i: int, ecfg: EBFTConfig):
     # donate bw: weights + (internal) Adam moments update in place, so the
     # live-block footprint stays at one block (the paper's 16 GB property)
     fused = jax.jit(fused_run, donate_argnums=(0,))
-    return opt, step, eval_loss, fused
+    # first-call (trace+compile) wall time books onto the compile clock,
+    # which the walk drains per phase — so the walk/tune histogram shows
+    # steady-state and the one-compile-per-block-kind cost lands in
+    # ebft/walk/tune_compile_s (docs/PERF.md)
+    return opt, FirstCallTimer(step), FirstCallTimer(eval_loss), \
+        FirstCallTimer(fused)
 
 
 def _stack_microbatches(data: List[Tuple]):

@@ -12,6 +12,13 @@ Dispatch resolves lazily (importing ``repro.kernels`` never imports jax
 or Pallas), so the registry is safe to touch from tooling. The old names
 (``kernels.masked_matmul`` etc.) remain as thin aliases over dispatch.
 
+On the kernel path (TPU or ``interpret=True``) every wrapper resolves
+its tile plan through :mod:`repro.kernels.tuning` when the caller passes
+no explicit tiles: a shape-keyed autotuner with a persistent plan cache
+(``--kernel-tune {off,cache,search}`` on the launchers; docs/PERF.md).
+Explicit tile kwargs always win, and mode ``off`` (the library default)
+is byte-identical to the pre-tuner behavior.
+
 This layer is OPTIONAL per-paper: packages exist only for compute
 hot-spots the paper itself optimizes (DESIGN.md §Kernels).
 """

@@ -14,6 +14,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import tuning
 from repro.kernels.flash_attention.flash_attention import flash_attention as _kernel
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.obs import trace as OT
@@ -25,6 +26,19 @@ def on_tpu() -> bool:
 
 
 def flash_attention(q, k, v, *, causal=True, q_offset=0, interpret=False, **tiles):
+    plan_src = None
+    if (on_tpu() or interpret) and not tiles:
+        # q_offset is deliberately not part of the key: it shifts the
+        # causal mask, not the tiling trade-off
+        tiles, plan_src = tuning.resolve(
+            "flash_attention",
+            {"BH": int(q.shape[0]), "Sq": int(q.shape[1]),
+             "Sk": int(k.shape[1]), "d": int(q.shape[2])},
+            {"q": str(q.dtype)},
+            {"causal": bool(causal)},
+            interpret=interpret,
+        )
+
     def run():
         if on_tpu() or interpret:
             return _kernel(
@@ -40,7 +54,9 @@ def flash_attention(q, k, v, *, causal=True, q_offset=0, interpret=False, **tile
     flops = 4.0 * BH * Sq * Sk * hd * (0.5 if causal else 1.0)
     traffic = sum(a.size * a.dtype.itemsize for a in (q, k, v)) \
         + q.size * q.dtype.itemsize
-    return record_kernel("kernels/flash_attention", flops, traffic, run)
+    attrs = dict(plan=plan_src, **tiles) if plan_src else None
+    return record_kernel("kernels/flash_attention", flops, traffic, run,
+                         attrs=attrs)
 
 
 def call(*operands, interpret: bool = False, **params):

@@ -11,6 +11,7 @@ from __future__ import annotations
 import jax
 import numpy as np
 
+from repro.kernels import tuning
 from repro.kernels.masked_matmul.masked_matmul import masked_matmul as _kernel
 from repro.kernels.masked_matmul.ref import masked_matmul_ref
 from repro.obs import trace as OT
@@ -22,6 +23,18 @@ def on_tpu() -> bool:
 
 
 def masked_matmul(x, w, m, interpret: bool = False, **tiles):
+    plan_src = None
+    if (on_tpu() or interpret) and not tiles:
+        # only the kernel path has tiles to pick (the jnp oracle doesn't),
+        # so cache hit-rates measure real launches, not ref-path calls
+        tiles, plan_src = tuning.resolve(
+            "masked_matmul",
+            {"M": int(np.prod(x.shape[:-1])), "K": int(x.shape[-1]),
+             "N": int(w.shape[-1])},
+            {"x": str(x.dtype), "w": str(w.dtype)},
+            interpret=interpret,
+        )
+
     def run():
         if on_tpu() or interpret:
             return _kernel(x, w, m, interpret=interpret or not on_tpu(), **tiles)
@@ -34,7 +47,9 @@ def masked_matmul(x, w, m, interpret: bool = False, **tiles):
     flops = 2.0 * rows * K * N
     traffic = (x.size * x.dtype.itemsize + w.size * w.dtype.itemsize
                + m.size * m.dtype.itemsize + rows * N * x.dtype.itemsize)
-    return record_kernel("kernels/masked_matmul", flops, traffic, run)
+    attrs = dict(plan=plan_src, **tiles) if plan_src else None
+    return record_kernel("kernels/masked_matmul", flops, traffic, run,
+                         attrs=attrs)
 
 
 def call(*operands, interpret: bool = False, **params):

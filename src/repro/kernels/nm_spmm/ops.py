@@ -10,6 +10,7 @@ from __future__ import annotations
 import jax
 import numpy as np
 
+from repro.kernels import tuning
 from repro.kernels.nm_spmm.nm_spmm import nm_spmm as _kernel
 from repro.kernels.nm_spmm.ref import nm_spmm_ref
 from repro.obs import trace as OT
@@ -21,6 +22,17 @@ def on_tpu() -> bool:
 
 
 def nm_spmm(x, vals, idx, *, n, m, interpret: bool = False, **tiles):
+    plan_src = None
+    if (on_tpu() or interpret) and not tiles:
+        tiles, plan_src = tuning.resolve(
+            "nm_spmm",
+            {"M": int(np.prod(x.shape[:-1])), "K": int(x.shape[-1]),
+             "N": int(vals.shape[-1])},
+            {"x": str(x.dtype), "v": str(vals.dtype)},
+            {"n": int(n), "m": int(m)},
+            interpret=interpret,
+        )
+
     def run():
         if on_tpu() or interpret:
             return _kernel(
@@ -36,7 +48,8 @@ def nm_spmm(x, vals, idx, *, n, m, interpret: bool = False, **tiles):
     flops = 2.0 * rows * K * N  # dense-equivalent MXU work
     traffic = (x.size * x.dtype.itemsize + vals.size * vals.dtype.itemsize
                + idx.size * idx.dtype.itemsize + rows * N * x.dtype.itemsize)
-    return record_kernel("kernels/nm_spmm", flops, traffic, run)
+    attrs = dict(plan=plan_src, **tiles) if plan_src else None
+    return record_kernel("kernels/nm_spmm", flops, traffic, run, attrs=attrs)
 
 
 def call(*operands, interpret: bool = False, **params):

@@ -29,6 +29,10 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 KINDS = ("ebft", "train", "serve", "dryrun")
 
+# mirrored from repro.kernels.tuning.MODES (kept literal here so parsing a
+# spec never imports the kernels package; test_runspec pins the agreement)
+KERNEL_TUNE_MODES = ("off", "cache", "search")
+
 # canonical flag -> deprecated aliases, per kind. ``--batch`` stays
 # canonical for ebft/train (it really is a batch size there); serve's old
 # ``--batch`` meant decode slots, hence the rename.
@@ -104,6 +108,8 @@ class RunSpec:
     epochs: int = 10
     no_fused_epochs: bool = False
     prefetch_depth: int = 1
+    kernel_tune: str = "cache"
+    kernel_cache: str = ""
     baselines: str = ""
     # -- train -------------------------------------------------------------
     steps: int = 100
@@ -133,11 +139,36 @@ class RunSpec:
     def from_argv(kind: str, argv: Optional[Sequence[str]] = None) -> "RunSpec":
         if kind not in KINDS:
             raise ValueError(f"unknown launcher kind {kind!r}; one of {KINDS}")
-        args = build_parser(kind).parse_args(argv)
+        ap = build_parser(kind)
+        args = ap.parse_args(argv)
         fields = {f.name for f in dataclasses.fields(RunSpec)}
-        return RunSpec(kind=kind, **{
+        spec = RunSpec(kind=kind, **{
             k: v for k, v in vars(args).items() if k in fields
         })
+        try:
+            spec.validate()
+        except ValueError as e:
+            # a parse-time error with usage, not a deep failure mid-walk
+            ap.error(str(e))
+        return spec
+
+    def validate(self) -> "RunSpec":
+        """Cross-field checks that argparse types can't express; raises
+        ``ValueError`` with an actionable message (``from_argv`` converts
+        it into the parser's usage error)."""
+        if self.kernel_tune not in KERNEL_TUNE_MODES:
+            raise ValueError(
+                f"--kernel-tune must be one of "
+                f"{'/'.join(KERNEL_TUNE_MODES)}, got {self.kernel_tune!r}"
+            )
+        if self.kind == "ebft" and self.prefetch_depth < 1:
+            raise ValueError(
+                f"--prefetch-depth must be >= 1 (got {self.prefetch_depth}); "
+                "the dispatch-ahead teacher stream needs at least one block "
+                "in flight. Strictly serial runs are a library-level mode "
+                "(EBFTConfig.prefetch_depth=0), not a launcher flag."
+            )
+        return self
 
     @staticmethod
     def from_manifest(manifest: Dict[str, Any]) -> "RunSpec":
@@ -204,8 +235,9 @@ class RunSpec:
 _KIND_FIELDS: Dict[str, Tuple[str, ...]] = {
     "ebft": ("arch", "pretrain_steps", "batch", "seq", "method", "sparsity",
              "pattern", "calib_samples", "lr", "epochs", "no_fused_epochs",
-             "prefetch_depth", "baselines", "mesh_data", "mesh_model", "seed",
-             "no_obs", "bench_out", "obs_jsonl"),
+             "prefetch_depth", "kernel_tune", "kernel_cache", "baselines",
+             "mesh_data", "mesh_model", "seed", "no_obs", "bench_out",
+             "obs_jsonl"),
     "train": ("arch", "steps", "batch", "seq", "lr", "microbatches",
               "compress", "ckpt_dir", "ckpt_every", "mesh_data", "mesh_model",
               "seed", "no_obs", "bench_out"),
@@ -233,7 +265,17 @@ _FLAG_KW: Dict[str, Dict[str, Any]] = {
                                 "instead of the fused scanned+donated "
                                 "dispatch"},
     "prefetch_depth": {"help": "teacher stream dispatched this many blocks "
-                               "ahead of the tuner (0 = strictly serial)"},
+                               "ahead of the tuner (must be >= 1; "
+                               "EBFTConfig.prefetch_depth=0 is the "
+                               "programmatic strictly-serial mode)"},
+    "kernel_tune": {"choices": list(KERNEL_TUNE_MODES),
+                    "help": "Pallas tile-plan resolution: off = built-in "
+                            "128 defaults, cache = use cached plans "
+                            "(default), search = measure candidates on a "
+                            "miss and persist the winner (docs/PERF.md)"},
+    "kernel_cache": {"help": "tile-plan cache path (default "
+                             "experiments/kernel_cache.json, or "
+                             "$REPRO_KERNEL_CACHE)"},
     "baselines": {"help": "comma list of {dsnot,mask,lora} to also run"},
     "mesh_data": {"help": "data-axis size for the calibration mesh "
                           "(0 = auto, 1x1 = single device)"},

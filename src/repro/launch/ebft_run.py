@@ -42,6 +42,7 @@ from repro.core.masks import prune
 from repro.data.tokens import (
     CorpusConfig, SyntheticCorpus, calibration_set, corpus_iterator, eval_set,
 )
+from repro.kernels import tuning
 from repro.launch.api import RunSpec
 from repro.launch.mesh import make_ebft_plan
 from repro.models.model import build
@@ -97,6 +98,10 @@ def main(argv=None) -> None:
     run = spec.start_obs_run()
     say = run.say if run is not None else print
 
+    tuning.configure(mode=spec.kernel_tune,
+                     path=spec.kernel_cache or None)
+    tuning.reset_stats()
+
     plan = make_ebft_plan(spec.mesh_data, spec.mesh_model)
     if plan.active:
         say(f"calibration mesh: {plan.describe()['axes']} "
@@ -108,6 +113,25 @@ def main(argv=None) -> None:
     params = model.init(jax.random.PRNGKey(spec.seed))
     phases = {}
     ppl = {}
+
+    if spec.kernel_tune != "off":
+        # warm the tile-plan cache on the shapes this run's walk launches
+        # (docs/PERF.md): in search mode this is where the measured sweeps
+        # run — outside the timed hot path; in cache mode it is a free
+        # readback whose hit/miss counts land in BENCH_ebft.json
+        pat = tuple(int(x) for x in spec.pattern.split(":")) \
+            if spec.pattern else None
+        with _phase("phase/kernel_tune", mode=spec.kernel_tune) as sp:
+            pretuned = tuning.pretune(
+                tuning.ebft_workloads(cfg, tokens=8 * spec.seq, seq=spec.seq,
+                                      pattern=pat),
+                interpret=jax.default_backend() != "tpu",
+            )
+        phases["kernel_tune"] = sp.duration
+        st = tuning.stats()
+        say(f"kernel plans: {len(pretuned)} workloads, "
+            f"{int(st['hits'])} cached, {int(st['searches'])} searched "
+            f"({st['search_s']:.1f}s search)")
 
     if spec.pretrain_steps:
         with _phase("phase/pretrain", steps=spec.pretrain_steps) as sp:
@@ -230,9 +254,28 @@ def main(argv=None) -> None:
                     "walk_device_total": summ.get(
                         "ebft/walk/device_dispatches", {}).get("value"),
                 },
+                # steady-state phase sums, with first-call (trace+compile)
+                # time split out per phase (docs/PERF.md): percentiles of
+                # the *_s histograms now reflect the pipeline, not warm-up
                 "walk_phases": {
-                    phase: summ.get(f"ebft/walk/{phase}_s", {}).get("sum")
-                    for phase in ("teacher", "tune", "student")
+                    **{
+                        phase: summ.get(f"ebft/walk/{phase}_s", {}).get("sum")
+                        for phase in ("teacher", "tune", "student")
+                    },
+                    **{
+                        f"{phase}_compile": summ.get(
+                            f"ebft/walk/{phase}_compile_s", {}).get("sum")
+                        for phase in ("teacher", "tune", "student")
+                    },
+                },
+                # tile-plan autotuner accounting (docs/PERF.md): a warm
+                # cache run must show misses == searches == 0 and
+                # search_s == 0.0 (CI gates this via
+                # `obs validate --require-cache-hits`)
+                "kernel_tuning": {
+                    "mode": spec.kernel_tune,
+                    "cache_path": tuning.state()["path"],
+                    **tuning.stats(),
                 },
             },
             summary_path=path,

@@ -41,6 +41,10 @@ def main(argv=None) -> int:
                     metavar="N",
                     help="fail if dispatch.per_block_max exceeds N "
                          "(the fused-walk dispatch budget, docs/PERF.md)")
+    vp.add_argument("--require-cache-hits", action="store_true",
+                    help="fail unless kernel_tuning shows a fully warm "
+                         "autotuner cache: hits >= 1, zero misses/"
+                         "searches/search seconds (docs/PERF.md)")
 
     args = ap.parse_args(argv)
     try:
@@ -62,6 +66,7 @@ def main(argv=None) -> int:
     problems = validate_payload(
         payload, require=args.require,
         max_dispatches_per_block=args.max_dispatches_per_block,
+        require_cache_hits=args.require_cache_hits,
     )
     if problems:
         for p in problems:

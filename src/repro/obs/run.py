@@ -183,6 +183,7 @@ def validate_payload(
     payload: Any,
     require: Optional[List[str]] = None,
     max_dispatches_per_block: Optional[int] = None,
+    require_cache_hits: bool = False,
 ) -> List[str]:
     """Returns a list of problems ([] = valid summary artifact).
 
@@ -193,6 +194,13 @@ def validate_payload(
     (docs/PERF.md): the artifact's ``dispatch.per_block_max`` — tune-path
     dispatches plus the two stream advances — must not exceed it. CI runs
     the tiny config with ``epochs + 2`` here.
+
+    ``require_cache_hits`` gates a warm autotuner run (docs/PERF.md):
+    the artifact's ``kernel_tuning`` section must show every plan
+    resolution served from the persistent cache — at least one hit, zero
+    misses, zero searches, zero search seconds. CI runs the EBFT job
+    once with ``--kernel-tune search`` and asserts this on the second,
+    ``--kernel-tune cache`` run.
     """
     problems: List[str] = []
     if not isinstance(payload, dict):
@@ -243,4 +251,26 @@ def validate_payload(
                     f"dispatch.per_block_max = {per_block} exceeds "
                     f"budget {max_dispatches_per_block}"
                 )
+
+    if require_cache_hits:
+        tuning = payload.get("kernel_tuning")
+        if not isinstance(tuning, dict):
+            problems.append(
+                "missing 'kernel_tuning' object (needed for "
+                "--require-cache-hits)"
+            )
+        else:
+            hits = tuning.get("hits")
+            if not isinstance(hits, (int, float)) or hits < 1:
+                problems.append(
+                    f"kernel_tuning.hits = {hits!r}, expected >= 1 "
+                    "(a warm run must resolve at least one plan)"
+                )
+            for field in ("misses", "searches", "search_s"):
+                val = tuning.get(field)
+                if not isinstance(val, (int, float)) or val != 0:
+                    problems.append(
+                        f"kernel_tuning.{field} = {val!r}, expected 0 "
+                        "on a warm cache run"
+                    )
     return problems

@@ -424,7 +424,8 @@ def test_run_clean_on_tiny_config():
     report = run(config_names=["tiny_dense"])
     assert report.exit_code("error") == 0
     assert report.passes_run == [
-        "kernels", "masks", "jaxpr", "sharding", "source_lint"
+        "kernels", "masks", "jaxpr", "sharding", "source_lint",
+        "tuning_cache",
     ]
     assert report.configs_checked == ["tiny_dense"]
 

@@ -130,6 +130,61 @@ def test_flash_attention_q_offset_decode_semantics():
 
 
 # ---------------------------------------------------------------------------
+# parity across non-default tile grids — every plan the autotuner can pick
+# must compute the same numbers (clamped requests included: a tile larger
+# than its dim clamps to the ragged edge and still has to be exact)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("tiles", [
+    dict(bm=32, bk=64, bn=64),     # multi-step grid on every axis
+    dict(bm=256, bk=128, bn=512),  # bm clamps 256->64, bn = whole N
+    dict(bm=64, bk=256, bn=128),   # whole-K tile (single k step)
+])
+def test_masked_matmul_parity_across_tile_grids(tiles):
+    M, K, N = 64, 256, 512
+    x = _rand((M, K), jnp.float32)
+    w = _rand((K, N), jnp.float32)
+    mask = jnp.asarray(RNG.random((K, N)) > 0.5)
+    out = MM.masked_matmul(x, w, mask, interpret=True, **tiles)
+    ref = masked_matmul_ref(x, w, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("tiles", [
+    dict(bm=8, bk=64, bn=64),
+    dict(bm=128, bk=256, bn=128),  # bm clamps 128->16, whole-K tile
+    dict(bm=16, bk=32, bn=32),
+])
+def test_nm_spmm_parity_across_tile_grids(tiles):
+    B, R, O = 16, 256, 128
+    w = _rand((R, O), jnp.float32)
+    mask = nm_mask(w, 2, 4)
+    vals, idx = nm_compress(w * mask, mask, 2, 4)
+    x = _rand((B, R), jnp.float32)
+    out = NM.nm_spmm(x, vals, idx, n=2, m=4, interpret=True, **tiles)
+    ref = nm_spmm_ref(x, vals, idx, n=2, m=4)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("tiles", [
+    dict(bq=32, bk=64),
+    dict(bq=256, bk=32),   # bq clamps 256->128 (whole Sq in one tile)
+    dict(bq=64, bk=128),   # whole-Sk tile (single j step)
+])
+def test_flash_attention_parity_across_tile_grids(tiles, causal):
+    BH, S, hd = 2, 128, 64
+    q = _rand((BH, S, hd), jnp.float32)
+    k = _rand((BH, S, hd), jnp.float32)
+    v = _rand((BH, S, hd), jnp.float32)
+    out = FA.flash_attention(q, k, v, causal=causal, interpret=True, **tiles)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
 # the uniform dispatch surface (repro.kernels.dispatch)
 # ---------------------------------------------------------------------------
 def test_dispatch_registry_names():

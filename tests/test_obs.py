@@ -231,6 +231,37 @@ def test_profiled_fn_passthrough_when_disabled_or_traced():
     assert "test/off/exec_s" not in s and "test/off/compiles" not in s
 
 
+def test_first_call_timer_books_compile_once_per_signature():
+    from repro.obs.profile import FirstCallTimer, compile_clock
+
+    start_run("t", console=False)
+    clock = compile_clock()
+    clock.take()  # drain anything earlier tests left pending
+    timed = FirstCallTimer(jax.jit(lambda x, i: x + i, static_argnames="i"))
+    x = jnp.arange(4.0)
+
+    timed(x, i=0)
+    assert clock.take() > 0.0          # first call: trace+compile booked
+    timed(x, i=0)
+    assert clock.take() == 0.0         # warm call books nothing
+    # a different static value is a different jit cache entry, so the
+    # signature must treat non-array leaves by value
+    timed(x, i=1)
+    assert clock.take() > 0.0
+    # clock drains: a second take with nothing new is zero
+    assert clock.take() == 0.0
+
+
+def test_first_call_timer_passthrough_when_disabled():
+    from repro.obs.profile import FirstCallTimer, compile_clock
+
+    clock = compile_clock()
+    clock.take()
+    timed = FirstCallTimer(jax.jit(lambda x: x * 2.0))
+    assert float(timed(jnp.float32(3.0))) == 6.0  # obs off: raw call
+    assert clock.take() == 0.0
+
+
 def test_is_abstract_and_live_bytes():
     assert not is_abstract(jnp.ones(3), {"a": 1.0})
     seen = []
@@ -286,9 +317,21 @@ def test_ebft_run_emits_valid_bench_artifact(tmp_path, capsys):
     assert payload["ebft"]["fused_epochs"] is True
     assert payload["dispatch"]["per_block_max"] == 3
     assert payload["dispatch"]["fused_all_blocks"] is True
-    # per-phase walk wall-clock was recorded
+    # per-phase walk wall-clock was recorded, with first-call
+    # (trace+compile) time split out of the steady-state sums
     for phase in ("teacher", "tune", "student"):
         assert payload["walk_phases"][phase] > 0
+        assert payload["walk_phases"][f"{phase}_compile"] >= 0
+    # the walk definitely compiled something (adv_scan per block index,
+    # the fused tune step) and none of it may hide in the phase sums
+    assert sum(payload["walk_phases"][f"{p}_compile"]
+               for p in ("teacher", "tune", "student")) > 0
+
+    # the tile-plan autotuner section is present (default mode: cache)
+    kt = payload["kernel_tuning"]
+    assert kt["mode"] == "cache"
+    assert kt["searches"] == 0 and kt["search_s"] == 0.0
+    assert kt["hits"] + kt["misses"] >= 1  # pretune resolved the workloads
 
     # phases + the paper's streaming-memory measurement
     assert {"pretrain", "prune", "ebft", "eval_dense"} <= set(payload["phases"])

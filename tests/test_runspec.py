@@ -101,3 +101,42 @@ def test_from_manifest_requires_run_spec_section():
 def test_no_obs_short_circuits_start_obs_run():
     spec = RunSpec.from_argv("ebft", ["--no-obs"])
     assert spec.start_obs_run() is None
+
+
+# ---------------------------------------------------------------------------
+# parse-time validation (validate() via from_argv)
+# ---------------------------------------------------------------------------
+def test_prefetch_depth_below_one_rejected_at_parse_time(capsys):
+    with pytest.raises(SystemExit):
+        RunSpec.from_argv("ebft", ["--prefetch-depth", "0"])
+    assert "prefetch-depth" in capsys.readouterr().err
+    # and as a direct ValueError from validate() for programmatic callers
+    with pytest.raises(ValueError, match="prefetch-depth.*>= 1"):
+        RunSpec(kind="ebft", prefetch_depth=0).validate()
+
+
+def test_kernel_tune_flag_choices():
+    for mode in ("off", "cache", "search"):
+        assert RunSpec.from_argv(
+            "ebft", ["--kernel-tune", mode]).kernel_tune == mode
+    with pytest.raises(SystemExit):  # argparse choices reject it
+        RunSpec.from_argv("ebft", ["--kernel-tune", "always"])
+    with pytest.raises(ValueError, match="kernel-tune"):
+        RunSpec(kind="ebft", kernel_tune="always").validate()
+
+
+def test_kernel_tune_modes_literal_matches_tuning_module():
+    # api.py keeps the literal so parsing never imports the kernels
+    # package; this is the pin that keeps the two in sync
+    from repro.kernels import tuning
+    from repro.launch.api import KERNEL_TUNE_MODES
+
+    assert KERNEL_TUNE_MODES == tuning.MODES
+
+
+def test_from_manifest_skips_validation():
+    # old artifacts may predate the prefetch_depth >= 1 launcher rule;
+    # round-tripping them must not raise
+    man = RunSpec.from_argv("ebft", []).to_manifest()
+    man["run_spec"]["prefetch_depth"] = 0
+    assert RunSpec.from_manifest(man).prefetch_depth == 0
